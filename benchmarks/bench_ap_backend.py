@@ -1,0 +1,38 @@
+"""Paper-technique x assigned-architecture integration surface: map each
+(arch x shape) cell's useful FLOPs onto the AP cost model (cycles via
+bit-serial op costs, power via eq 17) and contrast with the TPU v5e
+roofline bound from the dry-run.
+
+This is the honest comparison the paper invites: the AP is 'compute in
+memory' — zero weight-streaming traffic — but bit-serial: ~5500 cycles per
+fp32 MAC.  For MAC-dominated LM steps the v5e wins on raw throughput by
+orders of magnitude; the AP's regime is the memory-/collective-bound corner
+(decode) and, per the paper, the THERMAL envelope: W per result at equal
+area (see DESIGN.md §4)."""
+import json
+import pathlib
+
+from repro.core import models as M
+
+ART = pathlib.Path("artifacts/dryrun/pod16x16")
+
+
+def main():
+    if not ART.exists():
+        print("run the dry-run first")
+        return
+    print("arch,shape,tpu_bound_s,ap_seconds,ap_joules,tpu_advantage_x")
+    for f in sorted(ART.glob("*.json")):
+        r = json.loads(f.read_text())
+        rf = r["roofline"]
+        tpu_bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        # global useful flops for the step
+        flops = rf["model_flops_per_device"] * r["n_chips"]
+        ap = M.ap_backend_estimate(flops)      # one 2^20-PU AP
+        adv = ap["seconds"] / tpu_bound if tpu_bound > 0 else float("inf")
+        print(f"{r['arch']},{r['shape']},{tpu_bound:.3e},"
+              f"{ap['seconds']:.3e},{ap['joules']:.3e},{adv:.1e}")
+
+
+if __name__ == "__main__":
+    main()

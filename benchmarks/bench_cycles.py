@@ -1,0 +1,62 @@
+"""Paper §2.2 cycle-count claims: 8m add, O(m^2) multiply, ~4400-cycle FP32
+multiply (length-independent), and the three workloads' compute cycles."""
+import numpy as np
+
+from repro.core import apfloat, arith, isa
+from repro.core.engine import APEngine
+
+
+def rows():
+    out = []
+    # --- fixed-point add: 8m cycles ---------------------------------------
+    for m in (8, 16, 32):
+        eng = APEngine(n_words=256, n_bits=2 * m + 2)
+        a = eng.alloc.alloc(m)
+        b = eng.alloc.alloc(m)
+        c = eng.alloc.alloc(1)
+        rng = np.random.default_rng(m)
+        eng.load(a, rng.integers(0, 1 << m, 256, dtype=np.uint64))
+        eng.load(b, rng.integers(0, 1 << m, 256, dtype=np.uint64))
+        c0 = eng.cycles
+        isa.run_add(eng, a, b, c)
+        out.append((f"add_m{m}", eng.cycles - c0, f"paper 8m = {8 * m}"))
+
+    # --- fixed-point multiply: O(m^2) --------------------------------------
+    for m in (8, 16):
+        eng = APEngine(n_words=256, n_bits=4 * m + 4)
+        a = eng.alloc.alloc(m)
+        b = eng.alloc.alloc(m)
+        prod = eng.alloc.alloc(2 * m)
+        c = eng.alloc.alloc(1)
+        rng = np.random.default_rng(m)
+        eng.load(a, rng.integers(0, 1 << m, 256, dtype=np.uint64))
+        eng.load(b, rng.integers(0, 1 << m, 256, dtype=np.uint64))
+        c0 = eng.cycles
+        arith.run_mul(eng, a, b, prod, c)
+        out.append((f"mul_m{m}", eng.cycles - c0, f"paper O(m^2) ~ {8 * m * m}"))
+
+    # --- fp32 multiply: ~4400 cycles, independent of N ---------------------
+    for n in (64, 1024):
+        eng = APEngine(n_words=n, n_bits=256)
+        x = apfloat.FpField.alloc(eng)
+        y = apfloat.FpField.alloc(eng)
+        z = apfloat.FpField.alloc(eng)
+        s = apfloat.FpScratch.alloc(eng)
+        rng = np.random.default_rng(n)
+        apfloat.load_fp32(eng, x, rng.normal(size=n).astype(np.float32))
+        apfloat.load_fp32(eng, y, rng.normal(size=n).astype(np.float32))
+        c0 = eng.cycles
+        apfloat.fp_mul(eng, x, y, z, s)
+        out.append((f"fp32_mul_N{n}", eng.cycles - c0,
+                    "paper 4400, length-independent"))
+    return out
+
+
+def main():
+    print("name,cycles,reference")
+    for name, cycles, ref in rows():
+        print(f"{name},{cycles},{ref}")
+
+
+if __name__ == "__main__":
+    main()

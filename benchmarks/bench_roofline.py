@@ -1,0 +1,31 @@
+"""§Roofline deliverable: per-(arch x shape) terms from the dry-run
+artifacts (single-pod table + multi-pod check)."""
+import json
+import pathlib
+
+ART = pathlib.Path("artifacts/dryrun")
+
+
+def main():
+    d = ART / "pod16x16"
+    if not d.exists():
+        print("no dry-run artifacts found; run: "
+              "PYTHONPATH=src python -m repro.launch.dryrun --arch all "
+              "--shape all --mesh both")
+        return
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "useful_flop_ratio,mem_GiB_per_dev")
+    recs = [json.loads(f.read_text()) for f in sorted(d.glob("*.json"))]
+    recs.sort(key=lambda r: (r["shape"], r["arch"]))
+    for r in recs:
+        rf = r["roofline"]
+        print(f"{r['arch']},{r['shape']},{rf['compute_s']:.3e},"
+              f"{rf['memory_s']:.3e},{rf['collective_s']:.3e},"
+              f"{rf['dominant']},{rf['useful_flop_ratio']:.2f},"
+              f"{r['memory']['peak_bytes_per_device'] / 2**30:.2f}")
+    multi = sorted((ART / "pod2x16x16").glob("*.json"))
+    print(f"multi-pod cells compiled: {len(multi)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Figs 6 & 7: speedup-vs-area and power-vs-area for BS/FFT/DMM,
+plus the same-performance design points and break-even areas."""
+import numpy as np
+
+from repro.core import models as M
+
+
+def main():
+    print("== Fig 6/7 curves (area sweep) ==")
+    areas = np.geomspace(0.5, 100, 7)
+    for name in M.WORKLOADS:
+        s_simd, s_ap = M.speedup_vs_area_curves(name, areas)
+        p_simd, p_ap = M.power_vs_area_curves(name, areas)
+        print(f"workload={name}")
+        for i, a in enumerate(areas):
+            print(f"  area={a:7.2f}mm2  S_simd={s_simd[i]:8.1f} "
+                  f"S_ap={s_ap[i]:8.1f}  P_simd={p_simd[i]:7.3f}W "
+                  f"P_ap={p_ap[i]:7.3f}W")
+        print(f"  break-even area = {M.break_even_area_mm2(name):.2f} mm^2")
+
+    print("== same-performance design point (DMM, Fig 6/7 black dots) ==")
+    dp = M.paper_design_point("dmm")
+    print(f"speedup={dp.speedup:.0f}")
+    print(f"AP:   {dp.ap_n_pus} PUs, {dp.ap_area_mm2:.1f} mm^2, "
+          f"{dp.ap_power_W:.2f} W")
+    print(f"SIMD: {dp.simd_n_pus} PUs, {dp.simd_area_mm2:.1f} mm^2, "
+          f"{dp.simd_power_W:.2f} W")
+    print(f"power ratio x{dp.power_ratio:.2f} (paper: >2); "
+          f"power density ratio x{dp.power_density_ratio:.1f} (paper: ~25)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Paper §4 / Figs 10, 12, 13: AP vs SIMD 4-layer-stack thermal comparison."""
+from repro.core.floorplan import thermal_comparison
+
+
+def main():
+    res = thermal_comparison(grid_ap=128, grid_simd=64, workload="dmm")
+    dp = res["design_point"]
+    print(f"design point: S={dp.speedup:.0f}  "
+          f"AP {dp.ap_power_W:.2f}W/layer @{dp.ap_area_mm2:.1f}mm^2  "
+          f"SIMD {dp.simd_power_W:.2f}W/layer @{dp.simd_area_mm2:.1f}mm^2")
+    print("layer,ap_peak_C,ap_span_C,simd_peak_C,simd_min_C")
+    for l in range(4):
+        print(f"{l},{res['ap']['peak_C'][l]:.1f},{res['ap']['span_C'][l]:.2f},"
+              f"{res['simd']['peak_C'][l]:.1f},{res['simd']['min_C'][l]:.1f}")
+    ap_ok = max(res["ap"]["peak_C"]) < 85.0
+    simd_ok = res["simd"]["min_C"][0] < 85.0
+    print(f"3D-DRAM (85C limit): AP {'OK' if ap_ok else 'BLOCKED'} / "
+          f"SIMD {'OK' if simd_ok else 'BLOCKED'}   "
+          f"(paper: AP 55C OK, SIMD 98-128C blocked)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark driver — one section per paper table/figure + the roofline
+deliverable.  ``PYTHONPATH=src python -m benchmarks.run [section ...]``"""
+import sys
+import time
+
+from benchmarks import (bench_ap_backend, bench_cycles, bench_roofline,
+                        bench_speedup_power, bench_thermal, bench_workloads)
+
+SECTIONS = {
+    "cycles": ("§2.2 cycle-count claims", bench_cycles.main),
+    "speedup_power": ("Figs 6/7 speedup & power vs area",
+                      bench_speedup_power.main),
+    "workloads": ("§3.1 workloads on the AP emulator",
+                  bench_workloads.main),
+    "thermal": ("§4 thermal comparison (Figs 10/12/13)",
+                bench_thermal.main),
+    "roofline": ("§Roofline per-cell terms (dry-run artifacts)",
+                 bench_roofline.main),
+    "ap_backend": ("paper-technique x assigned archs (AP vs TPU)",
+                   bench_ap_backend.main),
+}
+
+
+def main() -> None:
+    wanted = sys.argv[1:] or list(SECTIONS)
+    for name in wanted:
+        title, fn = SECTIONS[name]
+        print(f"\n===== {name}: {title} =====", flush=True)
+        t0 = time.time()
+        fn()
+        print(f"----- {name} done in {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Reproduce the paper's figures end-to-end; writes CSVs under artifacts/.
+
+  Fig 6  speedup vs area (3 workloads x {SIMD, AP})
+  Fig 7  power vs area
+  Figs 10/12/13  thermal maps + T-Cut profiles (HotSpot-equivalent solver)
+
+  PYTHONPATH=src python examples/paper_figures.py
+"""
+import pathlib
+
+import numpy as np
+
+from repro.core import models as M
+from repro.core.floorplan import thermal_comparison
+
+OUT = pathlib.Path("artifacts/figures")
+
+
+def fig6_fig7() -> None:
+    areas = np.geomspace(0.2, 200, 60)          # mm^2
+    for name in M.WORKLOADS:
+        s_simd, s_ap = M.speedup_vs_area_curves(name, areas)
+        p_simd, p_ap = M.power_vs_area_curves(name, areas)
+        rows = np.column_stack([areas, s_simd, s_ap, p_simd, p_ap])
+        f = OUT / f"fig6_fig7_{name}.csv"
+        np.savetxt(f, rows, delimiter=",", header=(
+            "area_mm2,speedup_simd,speedup_ap,power_simd_W,power_ap_W"),
+            comments="")
+        be = M.break_even_area_mm2(name)
+        print(f"{name:4s}: break-even area {be:8.2f} mm^2  -> {f}")
+    dp = M.paper_design_point("dmm")
+    print(f"DMM design point: S={dp.speedup:.0f}  AP {dp.ap_area_mm2:.1f}mm^2"
+          f"/{dp.ap_power_W:.2f}W  SIMD {dp.simd_area_mm2:.1f}mm^2"
+          f"/{dp.simd_power_W:.2f}W  (power x{dp.power_ratio:.2f}, "
+          f"density x{dp.power_density_ratio:.1f})")
+
+
+def thermal() -> None:
+    res = thermal_comparison(grid_ap=256, grid_simd=64, workload="dmm")
+    for name in ("ap", "simd"):
+        r = res[name]
+        print(f"{name.upper():4s}: layer peaks "
+              + " ".join(f"{p:.1f}C" for p in r["peak_C"])
+              + f"   span(top layer) {r['span_C'][0]:.1f}C")
+        np.savetxt(OUT / f"fig13_tcut_{name}.csv",
+                   np.column_stack(r["t_cut"]), delimiter=",",
+                   header=",".join(f"layer{i}" for i in range(4)),
+                   comments="")
+        np.save(OUT / f"thermal_map_{name}.npy", r["T"])
+    dram_limit = 85.0
+    ap_ok = max(res["ap"]["peak_C"]) < dram_limit
+    simd_ok = max(res["simd"]["peak_C"]) < dram_limit
+    print(f"3D-DRAM stacking (85C limit): AP {'OK' if ap_ok else 'BLOCKED'}, "
+          f"SIMD {'OK' if simd_ok else 'BLOCKED'}  (paper: AP OK, SIMD blocked)")
+
+
+def main() -> None:
+    OUT.mkdir(parents=True, exist_ok=True)
+    fig6_fig7()
+    thermal()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Batched serving driver: prefill a batch of prompts, decode with KV cache.
+
+  PYTHONPATH=src python examples/serve_lm.py --batch 8 --prompt-len 64 \
+      --gen 32 --arch h2o-danube-3-4b
+
+Uses the reduced config of the chosen arch (CPU-sized) and the same
+prefill/decode step builders the dry-run lowers for the production mesh.
+Reports prefill latency and decode tokens/s.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models import serve as SV
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-3-4b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, P, G = args.batch, args.prompt_len, args.gen
+    max_seq = P + G
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, P)))}
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_seq, cfg.d_model)).astype(np.float32))
+    if cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_prefix_embeds, cfg.d_model))
+            .astype(np.float32))
+
+    prefill = jax.jit(lambda p, b: SV.prefill(p, b, cfg, max_seq=max_seq))
+    decode = jax.jit(lambda p, t, c, pos: SV.decode_step(p, t, c, pos, cfg))
+
+    t0 = time.time()
+    logits, caches = prefill(params, batch)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+    print(f"{args.arch} (reduced): prefill {B}x{P} tokens in "
+          f"{t_prefill * 1000:.0f} ms (incl. compile)")
+
+    toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    outs = [toks]
+    t0 = time.time()
+    for t in range(P, P + G):
+        logits, caches = decode(params, toks, caches, jnp.int32(t))
+        toks = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        outs.append(toks)
+    jax.block_until_ready(toks)
+    dt = time.time() - t0
+    total = B * G
+    print(f"decode: {G} steps x {B} sequences = {total} tokens in "
+          f"{dt:.2f} s -> {total / dt:.0f} tok/s (greedy)")
+    gen = np.asarray(jnp.concatenate(outs, 1))
+    print("sample continuation token ids:", gen[0][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,191 @@
+"""Packed bit-plane representation of the Associative Processing Array.
+
+The AP (paper Fig. 1) is an array of ``n_words`` rows x ``n_bits`` columns of
+associative bit cells.  A word-row is a Processing Unit (PU).  Compare and
+tagged-write operate on *columns* (selected by MASK) across *all rows* at once,
+so the natural TPU/JAX layout is **column-major bit planes**:
+
+    planes : uint32[n_bits, n_words // 32]
+
+plane ``i`` holds bit-column ``i`` for every word, packed 32 words per lane.
+One AP pass (a 3-column compare + a 2-column tagged write) is then a handful of
+bitwise VPU ops over contiguous lanes — the same re-blocking a TPU port of the
+CAM would use (HBM->VMEM streaming over the word axis, all active bit-columns
+resident; see kernels/ap_match).
+
+The TAG register is a packed ``uint32[n_words // 32]`` vector.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial, reduce
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LANE = 32  # words packed per uint32 lane
+_U32 = jnp.uint32
+FULL = jnp.uint32(0xFFFFFFFF)
+
+
+def n_lanes(n_words: int) -> int:
+    if n_words % LANE != 0:
+        raise ValueError(f"n_words must be a multiple of {LANE}, got {n_words}")
+    return n_words // LANE
+
+
+def alloc_planes(n_bits: int, n_words: int) -> jax.Array:
+    """All-zero associative array."""
+    return jnp.zeros((n_bits, n_lanes(n_words)), dtype=_U32)
+
+
+# ---------------------------------------------------------------------------
+# host <-> bitplane conversion
+# ---------------------------------------------------------------------------
+
+def pack_words(values: np.ndarray | jax.Array, n_bits: int) -> jax.Array:
+    """Pack integer words ``values[n_words]`` into bit planes [n_bits, n_words/32].
+
+    Bit ``i`` of word ``w`` lands in ``planes[i, w // 32]`` at lane-bit ``w % 32``.
+    Host-side (numpy) so >32-bit fields work without jax_enable_x64.
+    """
+    values = np.asarray(jax.device_get(values)).astype(np.uint64)
+    n_words = values.shape[0]
+    nl = n_lanes(n_words)
+    bits = (values[None, :] >> np.arange(n_bits, dtype=np.uint64)[:, None]) & 1
+    bits = bits.astype(np.uint32).reshape(n_bits, nl, LANE)
+    shifts = np.arange(LANE, dtype=np.uint32)
+    packed = (bits << shifts[None, None, :]).sum(axis=-1, dtype=np.uint32)
+    return jnp.asarray(packed)
+
+
+def unpack_words(planes: jax.Array, out_dtype=np.uint64) -> np.ndarray:
+    """Inverse of :func:`pack_words` -> integer words [n_words] (host numpy)."""
+    pl = np.asarray(jax.device_get(planes))
+    n_bits, nl = pl.shape
+    shifts = np.arange(LANE, dtype=np.uint32)
+    bits = (pl[:, :, None] >> shifts[None, None, :]) & 1  # [bits, nl, LANE]
+    bits = bits.reshape(n_bits, nl * LANE).astype(out_dtype)
+    weights = (out_dtype(1) << np.arange(n_bits, dtype=out_dtype))
+    return (bits * weights[:, None]).sum(axis=0, dtype=out_dtype)
+
+
+def pack_bits(bitvec: np.ndarray | jax.Array) -> jax.Array:
+    """Pack a boolean vector [n_words] into a packed tag row [n_words/32]."""
+    bitvec = jnp.asarray(bitvec).astype(_U32)
+    nl = n_lanes(bitvec.shape[0])
+    bits = bitvec.reshape(nl, LANE)
+    shifts = jnp.arange(LANE, dtype=_U32)
+    return (bits << shifts[None, :]).sum(axis=-1, dtype=_U32)
+
+
+def unpack_bits(row: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_bits` -> bool [n_words]."""
+    shifts = jnp.arange(LANE, dtype=_U32)
+    bits = (row[:, None] >> shifts[None, :]) & 1
+    return bits.reshape(-1).astype(jnp.bool_)
+
+
+def popcount(row: jax.Array) -> jax.Array:
+    """Number of set word-bits in a packed row (e.g. matched PUs in TAG)."""
+    return jax.lax.population_count(row).astype(jnp.int32).sum()
+
+
+# ---------------------------------------------------------------------------
+# the three silicon primitives: COMPARE, tagged WRITE, broadcast WRITE
+# Each is ONE AP cycle regardless of the number of active columns (columns act
+# in parallel on the match line / word line) — cycle cost lives in the engine.
+# ---------------------------------------------------------------------------
+
+def compare(planes: jax.Array, cols: jax.Array, key: jax.Array,
+            tag_in: jax.Array | None = None) -> jax.Array:
+    """Match ``key`` against columns ``cols`` of every word -> packed TAG.
+
+    cols : int32[K] column indices (the unmasked columns)
+    key  : uint32[K] key bits (0/1) for those columns
+    tag_in : optional packed row; if given the result is ANDed into it
+             (models compare restricted to previously tagged rows).
+    """
+    sel = planes[cols]                                    # [K, nl] gather
+    keyb = (key.astype(_U32) * FULL)[:, None]             # 0x0 / 0xFFFFFFFF
+    eq = ~(sel ^ keyb)                                    # per-bit XNOR
+    tag = reduce(jnp.bitwise_and, [eq[i] for i in range(eq.shape[0])])
+    if tag_in is not None:
+        tag = tag & tag_in
+    return tag
+
+
+def tagged_write(planes: jax.Array, tag: jax.Array, cols: jax.Array,
+                 key: jax.Array) -> jax.Array:
+    """Parallel write of ``key`` into columns ``cols`` of all tagged words."""
+    keyb = (key.astype(_U32) * FULL)[:, None]
+    old = planes[cols]
+    new = (old & ~tag[None, :]) | (keyb & tag[None, :])
+    return planes.at[cols].set(new)
+
+
+def broadcast_write(planes: jax.Array, cols: jax.Array, key: jax.Array) -> jax.Array:
+    """Write ``key`` into columns ``cols`` of ALL words (tag = all ones)."""
+    keyb = (key.astype(_U32) * FULL)[:, None]
+    nl = planes.shape[1]
+    return planes.at[cols].set(jnp.broadcast_to(keyb, (cols.shape[0], nl)))
+
+
+def write_column_bits(planes: jax.Array, col: int, bits: jax.Array) -> jax.Array:
+    """Host-side load of a full per-word bit column (data load, not an AP op)."""
+    return planes.at[col].set(bits)
+
+
+# ---------------------------------------------------------------------------
+# Field: a named range of bit-columns.  Shifts are free on the AP — "shift is
+# implemented by activating different bit columns" (§2.2) — so a shifted view
+# is just a new Field with offset column indices.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Field:
+    start: int
+    width: int
+
+    def col(self, i: int) -> int:
+        if not 0 <= i < self.width:
+            raise IndexError(f"bit {i} out of field width {self.width}")
+        return self.start + i
+
+    def cols(self) -> list[int]:
+        return list(range(self.start, self.start + self.width))
+
+    def bit(self, i: int) -> "Field":
+        return Field(self.col(i), 1)
+
+    def slice(self, lo: int, width: int) -> "Field":
+        if lo + width > self.width:
+            raise IndexError("slice outside field")
+        return Field(self.start + lo, width)
+
+    def shifted(self, k: int) -> "Field":
+        """View of this field shifted left by k columns (zero-cost AP shift)."""
+        return Field(self.start + k, self.width)
+
+
+class FieldAllocator:
+    """Trivial bump allocator for bit-columns of the associative word."""
+
+    def __init__(self, n_bits: int):
+        self.n_bits = n_bits
+        self._next = 0
+
+    def alloc(self, width: int, name: str = "") -> Field:
+        if self._next + width > self.n_bits:
+            raise MemoryError(
+                f"associative word overflow allocating {width} cols for {name!r}: "
+                f"{self._next}/{self.n_bits} used")
+        f = Field(self._next, width)
+        self._next += width
+        return f
+
+    @property
+    def used(self) -> int:
+        return self._next

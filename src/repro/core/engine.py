@@ -1,0 +1,295 @@
+"""The Associative Processor machine model.
+
+Implements the three silicon operations of the paper's AP (§2.1):
+
+* COMPARE  — key/mask match against all rows, result into TAG (1 cycle)
+* WRITE    — parallel write of key into masked columns of all TAGGED rows (1 cycle)
+* BWRITE   — broadcast write into masked columns of ALL rows (1 cycle)
+
+plus sequential row read (1 cycle / row, §2.1).
+
+A *pass* = COMPARE cycle followed by WRITE cycle (paper Table 1 footnote).
+Arithmetic routines (isa.py / arith.py / apfloat.py) compile to *pass
+schedules* — static tables of (compare cols/key, write cols/key) — which this
+engine executes in one fused `lax.scan`.
+
+Bookkeeping (exact, not statistical):
+
+* cycles     — host-side Python ints; the pass count is static so this is exact.
+* energy     — per-pass matched-row counts are measured on device and folded
+               into the paper's per-event energies (Table 3):
+               E_cmp  = k_cmp * (p_m * matched + p_mm * (n - matched))
+               E_wr   = k_wr  * (1.0 * matched + p_mw * (n - matched))
+               normalized to one SRAM-cell write = 1 (§3.2, eq 16).
+  This generalizes eq (16): with the adder's 1/8 match probability the
+  expectation of our measured count equals the paper's closed form — tested in
+  tests/test_power_model.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplane as bp
+from repro.core.bitplane import Field, FieldAllocator
+
+
+@dataclasses.dataclass(frozen=True)
+class PowerParams:
+    """Table 3 of the paper (normalized to SRAM-cell write power = 1)."""
+    p_sram_cell_uW: float = 0.5   # absolute anchor: 1 unit = 0.5 uW
+    p_m: float = 0.1              # per-bit energy, matched row, compare
+    p_mm: float = 0.75            # per-bit energy, mismatched row (line discharge)
+    p_mw: float = 0.1             # per-bit energy, miswrite (untagged row)
+    p_w: float = 1.0              # per-bit energy, true write (the unit)
+
+
+PAPER_POWER = PowerParams()
+
+
+@dataclasses.dataclass
+class PassSchedule:
+    """A static table of AP passes (compare + tagged write per row).
+
+    Columns are padded (by repetition) to the table-wide max K; ``kc``/``kw``
+    keep the true active-column counts for energy accounting.
+    """
+    cmp_cols: np.ndarray   # int32 [P, Kc]
+    cmp_key: np.ndarray    # uint32 [P, Kc]
+    w_cols: np.ndarray     # int32 [P, Kw]
+    w_key: np.ndarray      # uint32 [P, Kw]
+    kc: np.ndarray         # int32 [P]  true compare-column counts
+    kw: np.ndarray         # int32 [P]  true write-column counts
+
+    @property
+    def n_passes(self) -> int:
+        return int(self.cmp_cols.shape[0])
+
+    @staticmethod
+    def build(passes: Sequence[tuple[Sequence[int], Sequence[int],
+                                     Sequence[int], Sequence[int]]]
+              ) -> "PassSchedule":
+        """passes: list of (cmp_cols, cmp_key, w_cols, w_key) per pass."""
+        if not passes:
+            raise ValueError("empty pass schedule")
+        kc = np.array([len(p[0]) for p in passes], np.int32)
+        kw = np.array([len(p[2]) for p in passes], np.int32)
+        Kc, Kw = int(kc.max()), int(kw.max())
+
+        def pad(vals, K):
+            vals = list(vals)
+            return vals + [vals[0]] * (K - len(vals))
+
+        cc = np.array([pad(p[0], Kc) for p in passes], np.int32)
+        ck = np.array([pad(p[1], Kc) for p in passes], np.uint32)
+        wc = np.array([pad(p[2], Kw) for p in passes], np.int32)
+        wk = np.array([pad(p[3], Kw) for p in passes], np.uint32)
+        return PassSchedule(cc, ck, wc, wk, kc, kw)
+
+    @staticmethod
+    def concat(schedules: Sequence["PassSchedule"]) -> "PassSchedule":
+        Kc = max(s.cmp_cols.shape[1] for s in schedules)
+        Kw = max(s.w_cols.shape[1] for s in schedules)
+
+        def padcat(arrs, K):
+            out = []
+            for a in arrs:
+                if a.shape[1] < K:
+                    a = np.concatenate(
+                        [a, np.repeat(a[:, :1], K - a.shape[1], axis=1)], axis=1)
+                out.append(a)
+            return np.concatenate(out, axis=0)
+
+        return PassSchedule(
+            padcat([s.cmp_cols for s in schedules], Kc),
+            padcat([s.cmp_key for s in schedules], Kc),
+            padcat([s.w_cols for s in schedules], Kw),
+            padcat([s.w_key for s in schedules], Kw),
+            np.concatenate([s.kc for s in schedules]),
+            np.concatenate([s.kw for s in schedules]),
+        )
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _run_schedule(planes: jax.Array, cmp_cols, cmp_key, w_cols, w_key):
+    """Execute a pass schedule; returns planes and per-pass matched counts."""
+
+    def body(planes, xs):
+        cc, ck, wc, wk = xs
+        tag = bp.compare(planes, cc, ck)
+        matched = jax.lax.population_count(tag).astype(jnp.int32).sum()
+        planes = bp.tagged_write(planes, tag, wc, wk)
+        return planes, matched
+
+    planes, matched = jax.lax.scan(body, planes, (cmp_cols, cmp_key, w_cols, w_key))
+    return planes, matched
+
+
+class APEngine:
+    """One Associative Processing array: n_words PUs x n_bits columns."""
+
+    def __init__(self, n_words: int, n_bits: int = 256,
+                 power: PowerParams = PAPER_POWER, collect_stats: bool = True,
+                 backend: str = "jnp"):
+        if backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.n_words = n_words
+        self.n_bits = n_bits
+        self.power = power
+        self.collect_stats = collect_stats
+        self.backend = backend
+        self.planes = bp.alloc_planes(n_bits, n_words)
+        self.tag = jnp.zeros(bp.n_lanes(n_words), jnp.uint32)
+        self.alloc = FieldAllocator(n_bits)
+        self.reset_counters()
+
+    # ----------------------------------------------------------------- state
+    def reset_counters(self):
+        self.cycles = 0
+        self.compare_cycles = 0
+        self.write_cycles = 0
+        self.bwrite_cycles = 0
+        self.read_cycles = 0
+        self.energy = 0.0             # normalized (SRAM write = 1)
+        self.events = {"match": 0, "mismatch": 0, "write": 0, "miswrite": 0}
+
+    def counters(self) -> dict:
+        out = dict(cycles=self.cycles, compare_cycles=self.compare_cycles,
+                   write_cycles=self.write_cycles, bwrite_cycles=self.bwrite_cycles,
+                   read_cycles=self.read_cycles, energy=self.energy)
+        out.update(self.events)
+        return out
+
+    # ------------------------------------------------------------- data I/O
+    def load(self, field: Field, values) -> None:
+        """Host-side load of per-word integer values into a field (not an AP op)."""
+        vals = np.asarray(values, np.uint64)
+        if vals.shape != (self.n_words,):
+            raise ValueError(f"expected ({self.n_words},), got {vals.shape}")
+        sub = bp.pack_words(vals, field.width)
+        self.planes = self.planes.at[field.start:field.start + field.width].set(sub)
+
+    def read(self, field: Field, signed: bool = False) -> np.ndarray:
+        """Host-side readback of a field for all words (charges n read cycles)."""
+        self.read_cycles += self.n_words
+        self.cycles += self.n_words
+        sub = self.planes[field.start:field.start + field.width]
+        vals = np.asarray(bp.unpack_words(sub))
+        if signed and field.width < 64:
+            sign = vals >> (field.width - 1)
+            vals = vals.astype(np.int64) - (sign.astype(np.int64) << field.width)
+        return vals
+
+    def peek(self, field: Field) -> np.ndarray:
+        """Readback WITHOUT charging cycles (debug / test oracle only)."""
+        sub = self.planes[field.start:field.start + field.width]
+        return np.asarray(bp.unpack_words(sub))
+
+    # ------------------------------------------------------ silicon ops
+    def compare(self, cols: Sequence[int], key: Sequence[int],
+                restrict_to_tag: bool = False) -> None:
+        """COMPARE: one cycle; TAG <- match(key @ cols) [& TAG]."""
+        tag_in = self.tag if restrict_to_tag else None
+        self.tag = bp.compare(self.planes, jnp.asarray(cols, jnp.int32),
+                              jnp.asarray(key, jnp.uint32), tag_in)
+        self.cycles += 1
+        self.compare_cycles += 1
+        if self.collect_stats:
+            matched = int(bp.popcount(self.tag))
+            self._account_compare(len(cols), matched)
+
+    def write(self, cols: Sequence[int], key: Sequence[int]) -> None:
+        """WRITE: one cycle; key -> masked cols of all TAGGED rows."""
+        self.planes = bp.tagged_write(self.planes, self.tag,
+                                      jnp.asarray(cols, jnp.int32),
+                                      jnp.asarray(key, jnp.uint32))
+        self.cycles += 1
+        self.write_cycles += 1
+        if self.collect_stats:
+            matched = int(bp.popcount(self.tag))
+            self._account_write(len(cols), matched)
+
+    def bwrite(self, cols: Sequence[int], key: Sequence[int]) -> None:
+        """Broadcast write (all rows): one cycle."""
+        self.planes = bp.broadcast_write(self.planes, jnp.asarray(cols, jnp.int32),
+                                         jnp.asarray(key, jnp.uint32))
+        self.cycles += 1
+        self.bwrite_cycles += 1
+        if self.collect_stats:
+            self._account_write(len(cols), self.n_words)
+
+    def clear(self, field: Field) -> None:
+        self.bwrite(field.cols(), [0] * field.width)
+
+    def set_bits(self, field: Field, value: int) -> None:
+        """Broadcast an immediate constant into a field (1 cycle)."""
+        key = [(value >> i) & 1 for i in range(field.width)]
+        self.bwrite(field.cols(), key)
+
+    def load_tag_column(self, col: int) -> None:
+        """TAG <- column ``col`` (a 1-column compare against key=1)."""
+        self.compare([col], [1])
+
+    def tag_count(self) -> int:
+        return int(bp.popcount(self.tag))
+
+    # ------------------------------------------------------ fused schedules
+    def run(self, sched: PassSchedule) -> None:
+        """Execute a static pass schedule as one fused scan on device."""
+        if self.backend == "pallas":
+            from repro.kernels.ap_match import ops as _ap_ops
+            self.planes, matched = _ap_ops.run_schedule(
+                self.planes, sched.cmp_cols, sched.cmp_key,
+                sched.w_cols, sched.w_key, backend="pallas")
+        else:
+            self.planes, matched = _run_schedule(
+                self.planes,
+                jnp.asarray(sched.cmp_cols), jnp.asarray(sched.cmp_key),
+                jnp.asarray(sched.w_cols), jnp.asarray(sched.w_key))
+        P = sched.n_passes
+        self.cycles += 2 * P           # each pass = compare + write
+        self.compare_cycles += P
+        self.write_cycles += P
+        if self.collect_stats:
+            m = np.asarray(matched, np.int64)
+            n = self.n_words
+            kc = sched.kc.astype(np.float64)
+            kw = sched.kw.astype(np.float64)
+            mf = m.astype(np.float64)
+            pw = self.power
+            self.energy += float(np.sum(kc * (pw.p_m * mf + pw.p_mm * (n - mf))))
+            self.energy += float(np.sum(kw * (pw.p_w * mf + pw.p_mw * (n - mf))))
+            self.events["match"] += int(m.sum())
+            self.events["mismatch"] += int(P) * n - int(m.sum())
+            self.events["write"] += int((kw * mf).sum())
+            self.events["miswrite"] += int((kw * (n - mf)).sum())
+
+    # ------------------------------------------------------ energy helpers
+    def _account_compare(self, k: int, matched: int) -> None:
+        n = self.n_words
+        pw = self.power
+        self.energy += k * (pw.p_m * matched + pw.p_mm * (n - matched))
+        self.events["match"] += matched
+        self.events["mismatch"] += n - matched
+
+    def _account_write(self, k: int, matched: int) -> None:
+        n = self.n_words
+        pw = self.power
+        self.energy += k * (pw.p_w * matched + pw.p_mw * (n - matched))
+        self.events["write"] += k * matched
+        self.events["miswrite"] += k * (n - matched)
+
+    # ------------------------------------------------------ reporting
+    def energy_uJ(self) -> float:
+        """Absolute energy in microjoules, using the Table 3 SRAM anchor.
+
+        1 normalized unit = P_sram-cell * 1 cycle.  With the paper's ~0.5 uW
+        at ~1 GHz-class operation this is ~0.5 fJ/bit-event; we report
+        energy = events * 0.5e-9 uJ (documented anchor, used consistently).
+        """
+        return self.energy * self.power.p_sram_cell_uW * 1e-3  # 1 ns cycles

@@ -1,0 +1,414 @@
+"""HotSpot-equivalent 3D RC thermal model of the paper's die stack (Fig 9).
+
+Stack (top -> bottom):  Si_4 | Si_3 | Si_2 | Si_1 | TIM | heat spreader |
+heat sink -> convection to ambient.
+
+Discretization: the four silicon layers AND the copper heat spreader are a
+regular ny x nx grid over the die footprint (HotSpot's grid mode resolves
+the spreader laterally too — essential: lateral spreading through ~1 mm of
+copper is what flattens small hot dies; a lumped spreader misses it and
+wildly overestimates both the peak and the span of the 2.3 mm SIMD die).
+Below the spreader a lumped path models the sink:
+
+    R_pkg = R_spread(spreader->sink) + R_cond(sink) + R_convec
+
+applied as a uniform per-cell conductance to ambient.  Each layer has its
+own lateral sheet conductance g_lat[l] = k_l * t_l and each interface its
+own vertical conductance (die-bond between Si layers; TIM between Si_1 and
+the spreader).
+
+The steady-state system  G T = P  is SPD and solved matrix-free with
+Jacobi-preconditioned CG; the stencil application is the Pallas kernel
+``kernels/thermal_stencil`` (the jnp implementation here is the oracle).
+Constants are ONE documented set used for both the AP and the SIMD dies
+(DESIGN.md §7.2) so the comparison is apples-to-apples, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+AMBIENT_C = 45.0  # HotSpot default ambient (45 C)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackParams:
+    """Geometry/material constants (one set for AP and SIMD)."""
+    n_si_layers: int = 4
+    t_si: float = 250e-6         # 3D die thickness [m] (2013-era stacking)
+    k_si: float = 110.0          # silicon W/(m K)
+    r_bond: float = 0.7e-6       # die-bond interface resistance [m^2 K / W]
+    t_tim: float = 12e-6
+    k_tim: float = 4.0
+    t_spreader: float = 1e-3
+    k_spreader: float = 400.0    # copper, resolved as a grid layer
+    spreader_w: float = 30e-3
+    t_sink: float = 6.9e-3
+    k_sink: float = 400.0
+    sink_w: float = 60e-3
+    r_convec: float = 0.14       # total sink->ambient convective R [K/W]
+    spread_beta: float = 1.0     # effective source growth through the
+    #   spreader annulus beyond the die edge (the grid models the spreader
+    #   only under the die footprint; heat keeps spreading laterally in the
+    #   30 mm copper plate — source edge grows by beta * t_spreader per
+    #   side before entering the sink; calibrated once, see DESIGN.md §7.2)
+    c_si: float = 1.75e6         # volumetric heat capacity [J/(m^3 K)]
+    c_cu: float = 3.45e6
+
+    @property
+    def n_layers(self) -> int:
+        return self.n_si_layers + 1          # + spreader layer
+
+
+PAPER_STACK = StackParams()
+
+
+# ---------------------------------------------------------------------------
+# package lump below the spreader: spreader->sink spreading + sink + convec
+# ---------------------------------------------------------------------------
+
+def _spreading_resistance(a_source: float, a_plate: float, t: float,
+                          k: float, h: float) -> float:
+    """Lee/Song/Au closed-form constriction/spreading resistance."""
+    r1 = math.sqrt(a_source / math.pi)
+    r2 = math.sqrt(a_plate / math.pi)
+    eps = r1 / r2
+    tau = t / r2
+    Bi = h * r2 / k
+    lam = math.pi + 1.0 / (math.sqrt(math.pi) * eps)
+    phi = (math.tanh(lam * tau) + lam / Bi) / (1.0 + lam / Bi * math.tanh(lam * tau))
+    psi = (eps * tau / math.sqrt(math.pi)
+           + (1.0 - eps) * phi / math.sqrt(math.pi))
+    return psi / (k * r1 * math.sqrt(math.pi))
+
+
+def package_resistance(die_area_m2: float, p: StackParams = PAPER_STACK
+                       ) -> float:
+    """Lumped R from the spreader underside to ambient [K/W].
+
+    The spreader plate itself is grid-resolved; its footprint under the die
+    feeds the sink through spreading in the sink base.
+    """
+    a_sink = p.sink_w ** 2
+    h_sink_eff = 1.0 / (p.r_convec * a_sink)
+    # effective source: the copper plate keeps spreading beyond the die
+    # edge (outside the grid-resolved footprint)
+    src_w = min(math.sqrt(die_area_m2) + 2 * p.spread_beta * p.t_spreader,
+                p.spreader_w)
+    a_src = src_w ** 2
+    r_sp = _spreading_resistance(a_src, a_sink, p.t_sink, p.k_sink,
+                                 h_sink_eff)
+    r_cond_sink = p.t_sink / (p.k_sink * a_sink)
+    return r_sp + r_cond_sink + p.r_convec
+
+
+# ---------------------------------------------------------------------------
+# grid conductances (per layer / per interface)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Grid:
+    die_w: float                # die edge [m] (square dies, as in the paper)
+    ny: int                     # cells across the DIE footprint
+    nx: int
+    params: StackParams = PAPER_STACK
+    pkg_area: float = 0.0       # area feeding the package lump [m^2];
+    #   0 -> the spreader footprint (die + margin).  Sub-die zooms (one AP
+    #   block under tiling symmetry) pass the FULL die area so each cell
+    #   carries the same package conductance share as the die-level solve.
+    margin: int = 0             # extra spreader-only cells per side: the
+    #   copper plate extends beyond the die, so die edges couple to cooler
+    #   outer spreader — the source of the paper's ~3C center-to-edge span.
+
+    @property
+    def cell_w(self) -> float:
+        return self.die_w / self.nx
+
+    @property
+    def cell_area(self) -> float:
+        return self.cell_w * (self.die_w / self.ny)
+
+    @property
+    def dom_ny(self) -> int:
+        return self.ny + 2 * self.margin
+
+    @property
+    def dom_nx(self) -> int:
+        return self.nx + 2 * self.margin
+
+    def conductances(self) -> dict:
+        """g_lat [L], g_vert [L-1] (interfaces, top->bottom), g_pkg scalar."""
+        p = self.params
+        L = p.n_layers
+        g_lat = np.full(L, p.k_si * p.t_si)
+        g_lat[-1] = p.k_spreader * p.t_spreader        # spreader layer
+        g_vert = np.empty(L - 1)
+        # Si|Si interfaces: half-Si + bond + half-Si
+        r_sisi = p.t_si / p.k_si + p.r_bond            # [m^2 K/W]
+        g_vert[: L - 2] = self.cell_area / r_sisi
+        # Si_1 | spreader through the TIM
+        r_tim = 0.5 * p.t_si / p.k_si + p.t_tim / p.k_tim \
+            + 0.5 * p.t_spreader / p.k_spreader
+        g_vert[L - 2] = self.cell_area / r_tim
+        dom_area = self.dom_ny * self.dom_nx * self.cell_area
+        a_pkg = self.pkg_area or dom_area
+        r_pkg = package_resistance(a_pkg, p)
+        # per-cell share: cell_area / (r_pkg * A) — reduces to
+        # 1/(r_pkg * ncells) when the grid covers the package source area
+        g_pkg = self.cell_area / (r_pkg * a_pkg)
+        return {"g_lat": jnp.asarray(g_lat, jnp.float32),
+                "g_vert": jnp.asarray(g_vert, jnp.float32),
+                "g_pkg": float(g_pkg), "r_pkg": float(r_pkg)}
+
+    def fields(self) -> dict:
+        """Per-face conductance fields over the (die + margin) domain.
+
+        Silicon layers exist only over the die footprint (faces outside it
+        are zero = adiabatic); the spreader layer spans the full domain.
+        Returns seven [L, NY, NX] arrays: gx_lf, gx_rt, gy_up, gy_dn
+        (lateral faces), gz_up, gz_dn (interfaces), g_pkg (bottom lump).
+        """
+        g = self.conductances()
+        p = self.params
+        L = p.n_layers
+        NY, NX, m = self.dom_ny, self.dom_nx, self.margin
+        mask = np.zeros((L, NY, NX), np.float32)
+        mask[:-1, m:m + self.ny, m:m + self.nx] = 1.0   # silicon: die only
+        mask[-1] = 1.0                                  # spreader: everywhere
+        g_cell = np.asarray(g["g_lat"])[:, None, None] * mask
+
+        def face(a, b):  # harmonic mean of cell conductances (0-safe)
+            s = a + b
+            return np.where(s > 0, 2 * a * b / np.maximum(s, 1e-30), 0.0)
+
+        gx = face(g_cell[:, :, :-1], g_cell[:, :, 1:])   # [L, NY, NX-1]
+        gy = face(g_cell[:, :-1, :], g_cell[:, 1:, :])   # [L, NY-1, NX]
+        z = np.zeros((L, NY, 1), np.float32)
+        gx_lf = np.concatenate([z, gx], axis=2)
+        gx_rt = np.concatenate([gx, z], axis=2)
+        zy = np.zeros((L, 1, NX), np.float32)
+        gy_up = np.concatenate([zy, gy], axis=1)
+        gy_dn = np.concatenate([gy, zy], axis=1)
+        # vertical: interface exists where BOTH layers have material
+        gv = np.asarray(g["g_vert"])[:, None, None] \
+            * mask[:-1] * mask[1:]                       # [L-1, NY, NX]
+        zl = np.zeros((1, NY, NX), np.float32)
+        gz_up = np.concatenate([zl, gv], axis=0)
+        gz_dn = np.concatenate([gv, zl], axis=0)
+        g_pkg = np.zeros((L, NY, NX), np.float32)
+        g_pkg[-1] = g["g_pkg"]
+        return {k: jnp.asarray(v, jnp.float32) for k, v in dict(
+            gx_lf=gx_lf, gx_rt=gx_rt, gy_up=gy_up, gy_dn=gy_dn,
+            gz_up=gz_up, gz_dn=gz_dn, g_pkg=g_pkg).items()}
+
+    def capacities(self) -> jax.Array:
+        p = self.params
+        c = np.full(p.n_layers, p.c_si * self.cell_area * p.t_si)
+        c[-1] = p.c_cu * self.cell_area * p.t_spreader
+        return jnp.asarray(c, jnp.float32)
+
+    def pad_power(self, power) -> jax.Array:
+        """[n_si, ny, nx] silicon power -> [L, ny, nx] (spreader heatless)."""
+        power = jnp.asarray(power, jnp.float32)
+        if power.shape[0] == self.params.n_layers:
+            return power
+        pad = jnp.zeros((self.params.n_layers - power.shape[0],) +
+                        power.shape[1:], jnp.float32)
+        return jnp.concatenate([power, pad], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# stencil operator (jnp reference; kernels/thermal_stencil mirrors this)
+# ---------------------------------------------------------------------------
+
+def _vectors(L: int, g_lat, g_vert, g_pkg):
+    """Normalize scalar-or-vector conductances to per-layer vectors."""
+    g_lat = jnp.broadcast_to(jnp.asarray(g_lat, jnp.float32), (L,))
+    g_vert = jnp.broadcast_to(jnp.asarray(g_vert, jnp.float32),
+                              (max(L - 1, 1),))[: L - 1]
+    gv_u = jnp.concatenate([jnp.zeros((1,), jnp.float32), g_vert])
+    gv_d = jnp.concatenate([g_vert, jnp.zeros((1,), jnp.float32)])
+    g_pkg_vec = jnp.zeros((L,), jnp.float32).at[-1].set(g_pkg)
+    return g_lat, gv_u, gv_d, g_pkg_vec
+
+
+def apply_operator(T: jax.Array, g_lat, g_vert, g_pkg) -> jax.Array:
+    """y = G @ T.  T: [L, ny, nx] (layer 0 = TOP die, layer L-1 = spreader).
+
+    g_lat: scalar or [L]; g_vert: scalar or [L-1]; g_pkg: scalar (bottom
+    layer to ambient).  Adiabatic side/top boundaries.
+    """
+    L = T.shape[0]
+    g_lat, gv_u, gv_d, g_pkg_vec = _vectors(L, g_lat, g_vert, g_pkg)
+    gl = g_lat[:, None, None]
+    t_up = jnp.concatenate([T[:, :1], T[:, :-1]], axis=1)
+    t_dn = jnp.concatenate([T[:, 1:], T[:, -1:]], axis=1)
+    t_lf = jnp.concatenate([T[:, :, :1], T[:, :, :-1]], axis=2)
+    t_rt = jnp.concatenate([T[:, :, 1:], T[:, :, -1:]], axis=2)
+    y = gl * (4.0 * T - t_up - t_dn - t_lf - t_rt)
+    l_up = jnp.concatenate([T[:1], T[:-1]], axis=0)
+    l_dn = jnp.concatenate([T[1:], T[-1:]], axis=0)
+    y = y + gv_u[:, None, None] * (T - l_up) \
+          + gv_d[:, None, None] * (T - l_dn) \
+          + g_pkg_vec[:, None, None] * T
+    return y
+
+
+def _diag(shape, g_lat, g_vert, g_pkg):
+    """Diagonal of G (for Jacobi preconditioning)."""
+    L, ny, nx = shape
+    g_lat, gv_u, gv_d, g_pkg_vec = _vectors(L, g_lat, g_vert, g_pkg)
+    d = jnp.broadcast_to((4.0 * g_lat)[:, None, None], shape)
+    edge_y = jnp.zeros((ny, 1)).at[0].set(1).at[-1].set(1)
+    edge_x = jnp.zeros((1, nx)).at[:, 0].set(1).at[:, -1].set(1)
+    d = d - g_lat[:, None, None] * (edge_y + edge_x)[None]
+    d = d + (gv_u + gv_d + g_pkg_vec)[:, None, None]
+    return d
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def _cg_solve(b, diag, g_lat, g_vert, g_pkg, tol=1e-8, max_iter=6000):
+    """Jacobi-preconditioned conjugate gradient for G T = b."""
+    A = lambda v: apply_operator(v, g_lat, g_vert, g_pkg)
+    Minv = 1.0 / diag
+
+    x = jnp.zeros_like(b)
+    r = b
+    z = Minv * r
+    p = z
+    rz = jnp.vdot(r, z)
+    bnorm = jnp.linalg.norm(b)
+
+    def cond(state):
+        x, r, p, rz, it = state
+        return (jnp.linalg.norm(r) > tol * bnorm) & (it < max_iter)
+
+    def body(state):
+        x, r, p, rz, it = state
+        Ap = A(p)
+        alpha = rz / jnp.vdot(p, Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = Minv * r
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        return x, r, p, rz_new, it + 1
+
+    x, r, *_ = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous (face-conductance-field) operator — the production solver
+# ---------------------------------------------------------------------------
+
+def apply_operator_fields(T: jax.Array, F: dict) -> jax.Array:
+    """y = G @ T with per-face conductances (zero faces = adiabatic)."""
+    t_lf = jnp.concatenate([T[:, :, :1], T[:, :, :-1]], axis=2)
+    t_rt = jnp.concatenate([T[:, :, 1:], T[:, :, -1:]], axis=2)
+    t_up = jnp.concatenate([T[:, :1], T[:, :-1]], axis=1)
+    t_dn = jnp.concatenate([T[:, 1:], T[:, -1:]], axis=1)
+    l_up = jnp.concatenate([T[:1], T[:-1]], axis=0)
+    l_dn = jnp.concatenate([T[1:], T[-1:]], axis=0)
+    return (F["gx_lf"] * (T - t_lf) + F["gx_rt"] * (T - t_rt)
+            + F["gy_up"] * (T - t_up) + F["gy_dn"] * (T - t_dn)
+            + F["gz_up"] * (T - l_up) + F["gz_dn"] * (T - l_dn)
+            + F["g_pkg"] * T)
+
+
+def _diag_fields(F: dict) -> jax.Array:
+    d = (F["gx_lf"] + F["gx_rt"] + F["gy_up"] + F["gy_dn"]
+         + F["gz_up"] + F["gz_dn"] + F["g_pkg"])
+    return jnp.where(d > 0, d, 1.0)     # void cells: identity rows
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def _cg_solve_fields(b, F, tol=1e-8, max_iter=8000):
+    A = lambda v: apply_operator_fields(v, F)
+    Minv = 1.0 / _diag_fields(F)
+
+    x = jnp.zeros_like(b)
+    r = b
+    z = Minv * r
+    p = z
+    rz = jnp.vdot(r, z)
+    bnorm = jnp.linalg.norm(b)
+
+    def cond(state):
+        x, r, p, rz, it = state
+        return (jnp.linalg.norm(r) > tol * bnorm) & (it < max_iter)
+
+    def body(state):
+        x, r, p, rz, it = state
+        Ap = A(p)
+        alpha = rz / jnp.vdot(p, Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = Minv * r
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        return x, r, p, rz_new, it + 1
+
+    x, r, *_ = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
+    return x
+
+
+def steady_state(power: np.ndarray | jax.Array, grid: Grid,
+                 t_amb: float = AMBIENT_C, use_pallas: bool = False
+                 ) -> jax.Array:
+    """Steady-state temperatures [C] of the SILICON layers over the DIE.
+
+    power: [n_si_layers, ny, nx] watts per cell of the die footprint (the
+    spreader layer and margin ring are handled internally and stripped).
+    """
+    F = grid.fields()
+    power = grid.pad_power(power)
+    m = grid.margin
+    if m:
+        power = jnp.pad(power, ((0, 0), (m, m), (m, m)))
+    if use_pallas:
+        from repro.kernels.thermal_stencil import ops as _ops
+        dT = _ops.cg_solve_fields(power, F)
+    else:
+        dT = _cg_solve_fields(power, F)
+    n_si = grid.params.n_si_layers
+    if m:
+        return dT[:n_si, m:m + grid.ny, m:m + grid.nx] + t_amb
+    return dT[:n_si] + t_amb
+
+
+@partial(jax.jit, static_argnames=("n_steps",))
+def transient(T0, power, g_lat, g_vert, g_pkg, cap, dt, n_steps: int,
+              t_amb: float = AMBIENT_C):
+    """Explicit transient:  C dT/dt = P - G (T - Tamb).  Returns T(t_end)."""
+
+    def step(T, _):
+        dT = T - t_amb
+        dTdt = (power - apply_operator(dT, g_lat, g_vert, g_pkg)) \
+            / cap[:, None, None]
+        return T + dt * dTdt, jnp.max(T)
+
+    T, peaks = jax.lax.scan(step, T0, None, length=n_steps)
+    return T, peaks
+
+
+def transient_solve(power, grid: Grid, t_end: float,
+                    t_amb: float = AMBIENT_C) -> tuple[jax.Array, jax.Array]:
+    """Convenience wrapper: start from ambient, integrate to t_end seconds."""
+    g = grid.conductances()
+    cap = grid.capacities()
+    power = grid.pad_power(power)
+    gmax = float(4 * jnp.max(g["g_lat"]) + 2 * jnp.max(g["g_vert"])
+                 + g["g_pkg"])
+    dt = 0.5 * float(jnp.min(cap)) / gmax
+    n = max(int(t_end / dt), 1)
+    T0 = jnp.full(power.shape, t_amb, jnp.float32)
+    return transient(T0, power, g["g_lat"], g["g_vert"], g["g_pkg"],
+                     cap, dt, n, t_amb)

@@ -1,0 +1,1 @@
+from repro.kernels.ap_match.ops import run_schedule  # noqa: F401

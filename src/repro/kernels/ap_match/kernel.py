@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: AP compare + tagged-write pass schedule over bitplanes.
+
+This is the hot loop of the Associative Processor emulation (paper §2.1):
+every pass COMPAREs up to Kc bit-columns against a key (AND of per-column
+XNORs -> packed TAG) and then WRITEs up to Kw bit-columns of all tagged words.
+
+TPU adaptation of the CAM (DESIGN.md §2): the physical AP activates all
+columns of one *word block* simultaneously (columns share match lines).  We
+re-block the same layout for the HBM->VMEM hierarchy: the grid tiles the
+packed **word axis** (lanes of 32 words), one `(n_bits, BLOCK_LANES)` tile of
+the plane array is VMEM-resident per program, and *all* passes stream over it
+before it is written back — one HBM round-trip per tile for the entire
+schedule, instead of one per pass.  Passes commute across word blocks (all AP
+ops are word-parallel; rows never interact), so the loop interchange is exact.
+
+VMEM budget: `n_bits * BLOCK_LANES * 4` bytes for the tile (256 x 512 lanes =
+512 KiB) plus the schedule tables — comfortably inside the ~16 MiB/core VMEM
+of TPU v5e.  The schedule tables (cmp/write columns & keys) are small int
+arrays; on real hardware they belong in SMEM via scalar prefetch — kept as
+VMEM blocks here so the kernel also runs under ``interpret=True`` on CPU,
+which is how tests validate it against :mod:`ref`.
+
+Padding contract: ``PassSchedule`` pads column tables by repeating entry 0,
+which is idempotent for compare and write, so the kernel can loop to the
+static Kc/Kw bounds without masking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+FULL = 0xFFFFFFFF  # python int: avoids capturing a traced const in the kernel
+
+
+def _pass_kernel(cmp_cols_ref, cmp_key_ref, w_cols_ref, w_key_ref,
+                 planes_ref, out_planes_ref, matched_ref, *, n_passes: int,
+                 kc: int, kw: int):
+    # Bring the word-block tile into the output ref; all passes mutate it
+    # in place (VMEM-resident RMW), written back to HBM once at the end.
+    out_planes_ref[...] = planes_ref[...]
+
+    def one_pass(p, _):
+        # ---- COMPARE: TAG <- AND_k XNOR(plane[col_k], key_k)
+        tag = jnp.full((out_planes_ref.shape[1],), FULL, jnp.uint32)
+        for k in range(kc):                      # static unroll over columns
+            col = cmp_cols_ref[p, k]
+            row = out_planes_ref[col, :]
+            keyb = cmp_key_ref[p, k].astype(jnp.uint32) * jnp.uint32(FULL)
+            tag = tag & ~(row ^ keyb)
+        matched_ref[0, p] = jax.lax.population_count(tag).astype(jnp.int32).sum()
+        # ---- WRITE: tagged rows take the key bit in each write column
+        for k in range(kw):
+            col = w_cols_ref[p, k]
+            row = out_planes_ref[col, :]
+            keyb = w_key_ref[p, k].astype(jnp.uint32) * jnp.uint32(FULL)
+            out_planes_ref[col, :] = (row & ~tag) | (keyb & tag)
+        return 0
+
+    jax.lax.fori_loop(0, n_passes, one_pass, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_lanes", "interpret"))
+def run_schedule_kernel(planes: jax.Array, cmp_cols: jax.Array,
+                        cmp_key: jax.Array, w_cols: jax.Array,
+                        w_key: jax.Array, *, block_lanes: int = 512,
+                        interpret: bool = True):
+    """planes: uint32[n_bits, n_lanes] -> (planes', matched int32[P])."""
+    n_bits, n_lanes = planes.shape
+    P, kc = cmp_cols.shape
+    kw = w_cols.shape[1]
+    bl = min(block_lanes, n_lanes)
+    if n_lanes % bl != 0:
+        raise ValueError(f"n_lanes={n_lanes} not a multiple of block={bl}")
+    n_blocks = n_lanes // bl
+
+    kern = functools.partial(_pass_kernel, n_passes=P, kc=kc, kw=kw)
+    planes_out, matched = pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((P, kc), lambda i: (0, 0)),     # cmp_cols
+            pl.BlockSpec((P, kc), lambda i: (0, 0)),     # cmp_key
+            pl.BlockSpec((P, kw), lambda i: (0, 0)),     # w_cols
+            pl.BlockSpec((P, kw), lambda i: (0, 0)),     # w_key
+            pl.BlockSpec((n_bits, bl), lambda i: (0, i)),  # planes tile
+        ],
+        out_specs=[
+            pl.BlockSpec((n_bits, bl), lambda i: (0, i)),
+            pl.BlockSpec((1, P), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_bits, n_lanes), jnp.uint32),
+            jax.ShapeDtypeStruct((n_blocks, P), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cmp_cols, cmp_key, w_cols, w_key, planes)
+    return planes_out, matched.sum(axis=0)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the AP pass-schedule kernel.
+
+Semantics (paper §2.1/§2.2): for each pass p
+    TAG    <- AND_k ( planes[cmp_cols[p,k]] XNOR broadcast(cmp_key[p,k]) )
+    planes[w_cols[p,k]] <- (old & ~TAG) | (broadcast(w_key[p,k]) & TAG)
+and ``matched[p]`` = number of tagged words (popcount of TAG).
+
+Column padding in a :class:`~repro.core.engine.PassSchedule` repeats entry 0,
+which is idempotent for both compare (re-ANDing an identical XNOR term) and
+write (re-storing an identical value), so the oracle can ignore kc/kw.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+FULL = jnp.uint32(0xFFFFFFFF)
+
+
+def run_schedule(planes: jax.Array, cmp_cols: jax.Array, cmp_key: jax.Array,
+                 w_cols: jax.Array, w_key: jax.Array):
+    """Execute all passes sequentially over the full plane array.
+
+    planes: uint32[n_bits, n_lanes]; cmp_*: [P, Kc]; w_*: [P, Kw].
+    Returns (planes', matched[int32 P]).
+    """
+
+    def body(planes, xs):
+        cc, ck, wc, wk = xs
+        sel = planes[cc]                                  # [Kc, n_lanes]
+        keyb = (ck.astype(jnp.uint32) * FULL)[:, None]
+        eq = ~(sel ^ keyb)
+        tag = jnp.bitwise_and.reduce(eq, axis=0) if hasattr(jnp.bitwise_and, "reduce") \
+            else _and_reduce(eq)
+        matched = jax.lax.population_count(tag).astype(jnp.int32).sum()
+        old = planes[wc]
+        keyw = (wk.astype(jnp.uint32) * FULL)[:, None]
+        new = (old & ~tag[None, :]) | (keyw & tag[None, :])
+        planes = planes.at[wc].set(new)
+        return planes, matched
+
+    return jax.lax.scan(body, planes, (cmp_cols, cmp_key, w_cols, w_key))
+
+
+def _and_reduce(eq: jax.Array) -> jax.Array:
+    out = eq[0]
+    for i in range(1, eq.shape[0]):
+        out = out & eq[i]
+    return out

@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: FlashAttention-style blocked attention forward.
+
+Used by the LM-serving substrate for long prefill (the 32k-token cells):
+naive attention materializes an [Sq, Sk] score matrix per head — 4 GiB at
+32k^2 fp32 — while this kernel streams K/V blocks through VMEM with the
+online-softmax recurrence, so HBM traffic is O(S * dh) per head.
+
+Grid: (B*H, nQ, nK); the LAST grid axis iterates sequentially on TPU, so the
+output tile and the running (m, l) statistics are *revisited* across the nK
+steps (index maps ignore ki) and act as accumulators — initialized at ki == 0
+and normalized at ki == nK-1.  MXU does the two GEMMs (q k^T and p v); block
+shapes default to (128, 128) — MXU-aligned in both dims.
+
+Masking (causal / sliding-window / kv padding) is applied *inside* the block:
+a fully-masked block contributes p = 0 (explicitly zeroed, not just -inf,
+so window attention cannot corrupt the running sum).
+
+VMEM per program: q + k + v + o tiles + stats =
+(bq + 2*bk + bq) * dh * 4B + 2 * bq * 4B  ~ 260 KiB at 128/128/d128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: int | None,
+                  kv_len: int, q_offset: int, block_q: int, block_k: int,
+                  n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                 # [bq, dh]
+    k = k_ref[0].astype(jnp.float32)                 # [bk, dh]
+    v = v_ref[0].astype(jnp.float32)                 # [bk, dh]
+
+    s = jnp.dot(q, k.T) * scale                      # [bq, bk] (MXU)
+
+    # global positions of this tile's rows/cols
+    rows = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) \
+        + q_offset
+    cols = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = cols < kv_len
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+
+    s = jnp.where(mask, s, NEG)
+    m_prev = m_ref[0]                                # [bq]
+    l_prev = l_ref[0]
+    o_prev = o_ref[0]
+
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    o_new = o_prev * alpha[:, None] + jnp.dot(p, v)  # [bq, dh] (MXU)
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    o_ref[0] = o_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_ref[0]
+        o_ref[0] = o_ref[0] / jnp.where(l == 0.0, 1.0, l)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "scale", "causal", "window", "kv_len", "q_offset",
+    "block_q", "block_k", "interpret"))
+def flash_mha_kernel(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     scale: float, causal: bool, window: int | None,
+                     kv_len: int, q_offset: int, block_q: int = 128,
+                     block_k: int = 128, interpret: bool = True) -> jax.Array:
+    """q [BH, Sq, dh], k/v [BH, Sk, dh] (pre-broadcast GQA) -> o [BH, Sq, dh].
+
+    Sq/Sk must be multiples of block_q/block_k (ops.py pads).
+    """
+    BH, sq, dh = q.shape
+    sk = k.shape[1]
+    n_q, n_k = sq // block_q, sk // block_k
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        kv_len=kv_len, q_offset=q_offset, block_q=block_q, block_k=block_k,
+        n_k=n_k)
+
+    o, m, l = pl.pallas_call(
+        kern,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, block_q), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, sq, dh), jnp.float32),
+            jax.ShapeDtypeStruct((BH, sq), jnp.float32),
+            jax.ShapeDtypeStruct((BH, sq), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o

@@ -1,0 +1,60 @@
+"""Jitted public wrapper for blocked attention.
+
+Accepts the model-layer layout q [B, Sq, Hq, dh], k/v [B, Sk, Hkv, dh]
+(GQA allowed), handles padding to block multiples, and dispatches to the
+Pallas kernel or the jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        window: int | None = None, scale: float | None = None,
+        backend: str = "pallas", block_q: int = 128, block_k: int = 128,
+        interpret: bool = True) -> jax.Array:
+    """Attention over the last Sq positions of an Sk-long sequence."""
+    if backend == "jnp":
+        return _ref.mha(q, k, v, causal=causal, window=window, scale=scale)
+    if backend != "pallas":
+        raise ValueError(f"unknown backend {backend!r}")
+
+    B, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scale = float(scale if scale is not None else dh ** -0.5)
+
+    # [B, S, H, dh] -> [B*H, S, dh]
+    qt = q.transpose(0, 2, 1, 3).reshape(B * hq, sq, dh)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * hq, sk, dh)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * hq, sk, dh)
+
+    bq = min(block_q, max(sq, 8))
+    bk = min(block_k, max(sk, 8))
+    qt = _pad_to(qt, 1, bq)
+    kt = _pad_to(kt, 1, bk)
+    vt = _pad_to(vt, 1, bk)
+
+    o = _kernel.flash_mha_kernel(
+        qt, kt, vt, scale=scale, causal=causal, window=window,
+        kv_len=sk, q_offset=sk - sq, block_q=bq, block_k=bk,
+        interpret=interpret)
+    o = o[:, :sq].reshape(B, hq, sq, dh).transpose(0, 2, 1, 3)
+    return o.astype(q.dtype)

@@ -1,0 +1,57 @@
+"""Pure-jnp oracle for blocked (flash) attention.
+
+Layout convention: q [B, Sq, Hq, dh], k/v [B, Sk, Hkv, dh] with
+Hq % Hkv == 0 (GQA).  Query positions are the LAST Sq positions of the
+Sk-long key sequence (offset = Sk - Sq), the usual prefill/decode contract.
+
+Masking: ``causal`` hides j > i; ``window`` (sliding-window attention)
+additionally hides j <= i - window.  ``kv_len``/``q_len`` support padded
+inputs.  Softmax is computed in float32 regardless of input dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_mask(sq: int, sk: int, *, causal: bool, window: int | None,
+                   kv_len: int | None = None) -> jax.Array:
+    """bool [sq, sk]; True = attend."""
+    qi = jnp.arange(sq)[:, None] + (sk - sq)     # global q positions
+    kj = jnp.arange(sk)[None, :]
+    m = jnp.ones((sq, sk), bool)
+    if causal:
+        m &= kj <= qi
+    if window is not None:
+        m &= kj > qi - window
+    if kv_len is not None:
+        m &= kj < kv_len
+    return m
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True,
+        window: int | None = None, scale: float | None = None,
+        kv_len: int | None = None) -> jax.Array:
+    B, sq, hq, dh = q.shape
+    _, sk, hkv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    rep = hq // hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scale = scale if scale is not None else dh ** -0.5
+
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
+    mask = attention_mask(sq, sk, causal=causal, window=window, kv_len=kv_len)
+    scores = jnp.where(mask[None, None], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no valid key (fully masked) -> zero output, not NaN
+    any_valid = mask.any(axis=-1)
+    probs = jnp.where(any_valid[None, None, :, None], probs, 0.0)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)

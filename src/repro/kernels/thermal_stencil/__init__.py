@@ -1,0 +1,1 @@
+from repro.kernels.thermal_stencil.ops import apply_operator, cg_solve  # noqa: F401

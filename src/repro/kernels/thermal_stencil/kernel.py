@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: one application of the 3D RC thermal operator  y = G T.
+
+The HotSpot-equivalent steady-state solve (paper §4) is CG on the SPD
+conductance system; >95% of its time is the 7-point stencil sweep, so that
+sweep is the kernel.  T is [L, ny, nx]: the silicon layers plus the
+grid-resolved copper spreader, each with its own lateral sheet conductance
+``g_lat[l]`` and per-interface vertical conductances (fed in pre-padded as
+gv_up/gv_dn/g_pkg per-layer vectors, so the kernel formula is uniform:
+
+    y = g_lat*(4T - N4) + gv_up*(T - T_above) + gv_dn*(T - T_below) + g_pkg*T
+
+with zero entries encoding the adiabatic top and the lump-coupled bottom).
+
+TPU adaptation: the grid tiles the **y axis**; each program holds an
+(L, BLOCK_Y, nx) tile in VMEM — full layer depth and full x rows, so the
+vertical and x couplings never leave VMEM.  The y halo comes from passing
+the SAME array with index maps i-1 / i+1 (clamped); boundary programs
+replicate their own edge row (adiabatic = zero difference), matching the
+reference operator exactly.  VPU-only elementwise work — memory-bound by
+design (arithmetic intensity ~1 flop/byte).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stencil_kernel(gl_ref, gu_ref, gd_ref, gp_ref, c_ref, up_ref, dn_ref,
+                    y_ref, *, n_blocks: int):
+    i = pl.program_id(0)
+    C = c_ref[...]                                   # [L, BY, nx]
+    gl = gl_ref[...][:, None, None]
+    gu = gu_ref[...][:, None, None]
+    gd = gd_ref[...][:, None, None]
+    gp = gp_ref[...][:, None, None]
+    # y-halo rows: neighbor tile edge, or own edge at the global boundary
+    above = jnp.where(i > 0, up_ref[:, -1:, :], C[:, :1, :])
+    below = jnp.where(i < n_blocks - 1, dn_ref[:, :1, :], C[:, -1:, :])
+    t_up = jnp.concatenate([above, C[:, :-1, :]], axis=1)
+    t_dn = jnp.concatenate([C[:, 1:, :], below], axis=1)
+    t_lf = jnp.concatenate([C[:, :, :1], C[:, :, :-1]], axis=2)
+    t_rt = jnp.concatenate([C[:, :, 1:], C[:, :, -1:]], axis=2)
+    l_up = jnp.concatenate([C[:1], C[:-1]], axis=0)
+    l_dn = jnp.concatenate([C[1:], C[-1:]], axis=0)
+
+    y_ref[...] = gl * (4.0 * C - t_up - t_dn - t_lf - t_rt) \
+        + gu * (C - l_up) + gd * (C - l_dn) + gp * C
+
+
+def _field_kernel(c_ref, up_ref, dn_ref, gxl_ref, gxr_ref, gyu_ref, gyd_ref,
+                  gzu_ref, gzd_ref, gp_ref, y_ref, *, n_blocks: int):
+    """Heterogeneous per-face conductances (zero face = adiabatic):
+    the production operator — silicon exists only over the die footprint,
+    the spreader spans the full (die + margin) domain."""
+    i = pl.program_id(0)
+    C = c_ref[...]
+    above = jnp.where(i > 0, up_ref[:, -1:, :], C[:, :1, :])
+    below = jnp.where(i < n_blocks - 1, dn_ref[:, :1, :], C[:, -1:, :])
+    t_up = jnp.concatenate([above, C[:, :-1, :]], axis=1)
+    t_dn = jnp.concatenate([C[:, 1:, :], below], axis=1)
+    t_lf = jnp.concatenate([C[:, :, :1], C[:, :, :-1]], axis=2)
+    t_rt = jnp.concatenate([C[:, :, 1:], C[:, :, -1:]], axis=2)
+    l_up = jnp.concatenate([C[:1], C[:-1]], axis=0)
+    l_dn = jnp.concatenate([C[1:], C[-1:]], axis=0)
+    y_ref[...] = gxl_ref[...] * (C - t_lf) + gxr_ref[...] * (C - t_rt) \
+        + gyu_ref[...] * (C - t_up) + gyd_ref[...] * (C - t_dn) \
+        + gzu_ref[...] * (C - l_up) + gzd_ref[...] * (C - l_dn) \
+        + gp_ref[...] * C
+
+
+@functools.partial(jax.jit, static_argnames=("block_y", "interpret"))
+def apply_operator_fields_kernel(T: jax.Array, gx_lf, gx_rt, gy_up, gy_dn,
+                                 gz_up, gz_dn, g_pkg, *, block_y: int = 32,
+                                 interpret: bool = True) -> jax.Array:
+    L, ny, nx = T.shape
+    by = min(block_y, ny)
+    while ny % by != 0:
+        by -= 1
+    n_blocks = ny // by
+
+    kern = functools.partial(_field_kernel, n_blocks=n_blocks)
+    tile = pl.BlockSpec((L, by, nx), lambda i: (0, i, 0))
+    spec_up = pl.BlockSpec((L, by, nx),
+                           lambda i: (0, jnp.maximum(i - 1, 0), 0))
+    spec_dn = pl.BlockSpec((L, by, nx),
+                           lambda i: (0, jnp.minimum(i + 1, n_blocks - 1), 0))
+    return pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[tile, spec_up, spec_dn] + [tile] * 7,
+        out_specs=tile,
+        out_shape=jax.ShapeDtypeStruct((L, ny, nx), T.dtype),
+        interpret=interpret,
+    )(T, T, T, gx_lf, gx_rt, gy_up, gy_dn, gz_up, gz_dn, g_pkg)
+
+
+@functools.partial(jax.jit, static_argnames=("block_y", "interpret"))
+def apply_operator_kernel(T: jax.Array, g_lat: jax.Array, gv_up: jax.Array,
+                          gv_dn: jax.Array, g_pkg_vec: jax.Array, *,
+                          block_y: int = 32, interpret: bool = True
+                          ) -> jax.Array:
+    L, ny, nx = T.shape
+    by = min(block_y, ny)
+    while ny % by != 0:          # largest divisor <= requested block
+        by -= 1
+    n_blocks = ny // by
+
+    kern = functools.partial(_stencil_kernel, n_blocks=n_blocks)
+    vec = pl.BlockSpec((L,), lambda i: (0,))
+    spec_c = pl.BlockSpec((L, by, nx), lambda i: (0, i, 0))
+    spec_up = pl.BlockSpec((L, by, nx),
+                           lambda i: (0, jnp.maximum(i - 1, 0), 0))
+    spec_dn = pl.BlockSpec((L, by, nx),
+                           lambda i: (0, jnp.minimum(i + 1, n_blocks - 1), 0))
+    return pl.pallas_call(
+        kern,
+        grid=(n_blocks,),
+        in_specs=[vec, vec, vec, vec, spec_c, spec_up, spec_dn],
+        out_specs=pl.BlockSpec((L, by, nx), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, ny, nx), T.dtype),
+        interpret=interpret,
+    )(g_lat, gv_up, gv_dn, g_pkg_vec, T, T, T)

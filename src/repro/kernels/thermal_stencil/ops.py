@@ -1,0 +1,113 @@
+"""Jitted wrappers: Pallas thermal stencil + CG solve built on it.
+
+``cg_solve`` mirrors :func:`repro.core.thermal._cg_solve` (Jacobi-
+preconditioned CG) with the stencil application replaced by the Pallas
+kernel; ``repro.core.thermal.steady_state(use_pallas=True)`` routes here.
+Conductances may be scalars or per-layer vectors (see core.thermal).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.thermal import _vectors
+from repro.kernels.thermal_stencil import kernel as _kernel
+
+
+def apply_operator(T: jax.Array, g_lat, g_vert, g_pkg, *,
+                   block_y: int = 32, interpret: bool = True) -> jax.Array:
+    """y = G @ T (same contract as core.thermal.apply_operator)."""
+    L = T.shape[0]
+    g_lat, gv_u, gv_d, g_pkg_vec = _vectors(L, g_lat, g_vert, g_pkg)
+    return _kernel.apply_operator_kernel(
+        T, g_lat, gv_u, gv_d, g_pkg_vec, block_y=block_y,
+        interpret=interpret)
+
+
+def apply_operator_fields(T: jax.Array, F: dict, *, block_y: int = 32,
+                          interpret: bool = True) -> jax.Array:
+    """Heterogeneous operator (same contract as
+    core.thermal.apply_operator_fields)."""
+    return _kernel.apply_operator_fields_kernel(
+        T, F["gx_lf"], F["gx_rt"], F["gy_up"], F["gy_dn"], F["gz_up"],
+        F["gz_dn"], F["g_pkg"], block_y=block_y, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "block_y",
+                                             "interpret"))
+def cg_solve_fields(b: jax.Array, F: dict, tol: float = 1e-8,
+                    max_iter: int = 8000, block_y: int = 32,
+                    interpret: bool = True) -> jax.Array:
+    """Jacobi-preconditioned CG on the heterogeneous Pallas stencil."""
+    from repro.core.thermal import _diag_fields
+    A = lambda v: apply_operator_fields(v, F, block_y=block_y,
+                                        interpret=interpret)
+    Minv = 1.0 / _diag_fields(F)
+
+    x = jnp.zeros_like(b)
+    r = b
+    z = Minv * r
+    p = z
+    rz = jnp.vdot(r, z)
+    bnorm = jnp.linalg.norm(b)
+
+    def cond(state):
+        x, r, p, rz, it = state
+        return (jnp.linalg.norm(r) > tol * bnorm) & (it < max_iter)
+
+    def body(state):
+        x, r, p, rz, it = state
+        Ap = A(p)
+        alpha = rz / jnp.vdot(p, Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = Minv * r
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        return x, r, p, rz_new, it + 1
+
+    x, r, *_ = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "block_y",
+                                             "interpret"))
+def cg_solve(b: jax.Array, diag: jax.Array, g_lat, g_vert, g_pkg,
+             tol: float = 1e-8, max_iter: int = 6000,
+             block_y: int = 32, interpret: bool = True) -> jax.Array:
+    """Jacobi-preconditioned CG for G T = b with the Pallas stencil."""
+    L = b.shape[0]
+    g_lat, gv_u, gv_d, g_pkg_vec = _vectors(L, g_lat, g_vert, g_pkg)
+    A = lambda v: _kernel.apply_operator_kernel(
+        v, g_lat, gv_u, gv_d, g_pkg_vec, block_y=block_y,
+        interpret=interpret)
+    Minv = 1.0 / diag
+
+    x = jnp.zeros_like(b)
+    r = b
+    z = Minv * r
+    p = z
+    rz = jnp.vdot(r, z)
+    bnorm = jnp.linalg.norm(b)
+
+    def cond(state):
+        x, r, p, rz, it = state
+        return (jnp.linalg.norm(r) > tol * bnorm) & (it < max_iter)
+
+    def body(state):
+        x, r, p, rz, it = state
+        Ap = A(p)
+        alpha = rz / jnp.vdot(p, Ap)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = Minv * r
+        rz_new = jnp.vdot(r, z)
+        beta = rz_new / rz
+        p = z + beta * p
+        return x, r, p, rz_new, it + 1
+
+    x, r, *_ = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
+    return x

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the 3D RC thermal stencil.
+
+The reference operator *is* :func:`repro.core.thermal.apply_operator` — the
+solver the paper-reproduction thermal analysis runs on by default.  Re-export
+it so the kernel tests follow the standard kernels/<name>/{kernel,ops,ref}
+pattern.
+"""
+from repro.core.thermal import apply_operator  # noqa: F401

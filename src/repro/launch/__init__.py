@@ -1,0 +1,1 @@
+"""Launcher: production mesh, per-cell step builders, dry-run + roofline."""

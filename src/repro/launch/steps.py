@@ -1,0 +1,232 @@
+"""Step builders: jitted train / prefill / decode with explicit shardings.
+
+Each builder returns (jitted_fn, example_args) where example_args are
+ShapeDtypeStructs — ``jitted.lower(*example_args)`` is the dry-run contract
+(no device allocation).  The same builders drive the real train.py/serve.py
+with concrete arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.models import model as M
+from repro.models import serve as SV
+from repro.models.layers import Sharder
+from repro.models.model import PerfConfig
+from repro.optim import AdamWConfig, adamw_init, adamw_update
+from repro.parallel.sharding import cache_specs, param_specs
+
+
+def _axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def make_sharder(mesh, multi_pod: bool, tiny_batch: bool = False,
+                 parallelism: str = "2d") -> Sharder:
+    data = _axes(multi_pod)
+    if tiny_batch:
+        # B < data width: shard sequence/state over the whole mesh instead
+        seq = (("pod", "data", "model") if multi_pod else ("data", "model"))
+        return Sharder(mesh=mesh, data_axes=None, model_axes="model",
+                       seq_axes=seq)
+    if parallelism == "fsdp":
+        # pure ZeRO-3: batch over the whole mesh, activations unsharded on
+        # features (weights stay 256-way sharded via param_specs)
+        whole = (("pod", "data", "model") if multi_pod
+                 else ("data", "model"))
+        return Sharder(mesh=mesh, data_axes=whole, model_axes=None)
+    return Sharder(mesh=mesh, data_axes=data, model_axes="model")
+
+
+def _named(mesh, tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def params_sds(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda k: M.init_params(cfg, k, dtype), jax.random.PRNGKey(0))
+
+
+def _batch_extras_sds(cfg: ArchConfig, lead: tuple, dtype, data):
+    sds, specs = {}, {}
+    if cfg.family == "encdec":
+        sds["audio_embeds"] = jax.ShapeDtypeStruct(
+            lead + (cfg.enc_seq, cfg.d_model), dtype)
+        specs["audio_embeds"] = P(*([None] * (len(lead) - 1)), data,
+                                  None, None)
+    if cfg.n_prefix_embeds:
+        sds["prefix_embeds"] = jax.ShapeDtypeStruct(
+            lead + (cfg.n_prefix_embeds, cfg.d_model), dtype)
+        specs["prefix_embeds"] = P(*([None] * (len(lead) - 1)), data,
+                                   None, None)
+    return sds, specs
+
+
+# ===========================================================================
+# train
+# ===========================================================================
+
+def make_train_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
+                    perf: PerfConfig = PerfConfig(),
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    multi_pod: bool = False, dtype=jnp.bfloat16):
+    shd = make_sharder(mesh, multi_pod, parallelism=perf.parallelism)
+    data = shd.data_axes
+    if perf.opt_moments == "bf16":
+        import dataclasses as _dc
+        opt_cfg = _dc.replace(opt_cfg, moments_dtype=jnp.bfloat16)
+    psds = params_sds(cfg, dtype)
+    pspecs = param_specs(cfg, psds, multi_pod)
+    osds = jax.eval_shape(functools.partial(adamw_init, cfg=opt_cfg), psds)
+    ospecs = {"m": pspecs, "v": pspecs, "step": P()}
+
+    accum = perf.accum_steps
+    Bm = cell.global_batch // accum
+    lead = (accum, Bm)
+    batch_sds = {
+        "tokens": jax.ShapeDtypeStruct(lead + (cell.seq_len,), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(lead + (cell.seq_len,), jnp.int32),
+    }
+    batch_specs = {
+        "tokens": P(None, data, None),
+        "labels": P(None, data, None),
+    }
+    ex_sds, ex_specs = _batch_extras_sds(cfg, lead, dtype, data)
+    batch_sds.update(ex_sds)
+    batch_specs.update(ex_specs)
+
+    def train_step(params, opt, batch):
+        def micro(gsum, mb):
+            (loss, met), g = jax.value_and_grad(
+                M.loss_fn, has_aux=True)(params, mb, cfg, shd, perf)
+            gsum = jax.tree_util.tree_map(
+                lambda a, b: a + b.astype(jnp.float32), gsum, g)
+            return gsum, loss
+
+        gz = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        gsum, losses = jax.lax.scan(micro, gz, batch)
+        gsum = jax.tree_util.tree_map(lambda g: g / accum, gsum)
+        params, opt, metrics = adamw_update(params, gsum, opt, opt_cfg)
+        metrics["loss"] = losses.mean()
+        return params, opt, metrics
+
+    met_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+    jt = jax.jit(
+        train_step,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                      _named(mesh, batch_specs)),
+        out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs),
+                       _named(mesh, met_specs)),
+        donate_argnums=(0, 1))
+    return jt, (psds, osds, batch_sds)
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+def make_prefill_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
+                      perf: PerfConfig = PerfConfig(),
+                      multi_pod: bool = False, dtype=jnp.bfloat16):
+    data = _axes(multi_pod)
+    tiny = cell.global_batch < 16
+    shd = make_sharder(mesh, multi_pod, tiny_batch=tiny)
+    psds = params_sds(cfg, dtype)
+    pspecs = param_specs(cfg, psds, multi_pod)
+
+    B, S = cell.global_batch, cell.seq_len
+    batch_sds = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    batch_specs = {"tokens": P(shd.data_axes, None)}
+    ex_sds, ex_specs = _batch_extras_sds(cfg, (B,), dtype, shd.data_axes)
+    batch_sds.update(ex_sds)
+    batch_specs.update(ex_specs)
+
+    csds = jax.eval_shape(
+        functools.partial(SV.init_caches, cfg, B, S, dtype,
+                          kv_quant=perf.kv_quant))
+    cspecs = cache_specs(cfg, csds, multi_pod)
+    cspecs = _retarget_cache_specs(cspecs, shd)
+
+    def prefill_step(params, batch):
+        return SV.prefill(params, batch, cfg, shd, perf, max_seq=S)
+
+    jt = jax.jit(
+        prefill_step,
+        in_shardings=(_named(mesh, pspecs), _named(mesh, batch_specs)),
+        out_shardings=(NamedSharding(mesh, P(shd.data_axes, "model")),
+                       _named(mesh, cspecs)))
+    return jt, (psds, batch_sds)
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+def make_decode_step(cfg: ArchConfig, cell: ShapeCell, mesh, *,
+                     perf: PerfConfig = PerfConfig(),
+                     multi_pod: bool = False, dtype=jnp.bfloat16):
+    tiny = cell.global_batch < 16
+    shd = make_sharder(mesh, multi_pod, tiny_batch=tiny)
+    psds = params_sds(cfg, dtype)
+    pspecs = param_specs(cfg, psds, multi_pod)
+
+    B, S = cell.global_batch, cell.seq_len
+    csds = jax.eval_shape(
+        functools.partial(SV.init_caches, cfg, B, S, dtype,
+                          kv_quant=perf.kv_quant))
+    cspecs = cache_specs(cfg, csds, multi_pod)
+    cspecs = _retarget_cache_specs(cspecs, shd)
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def decode_fn(params, tokens, caches, pos):
+        # unrolled layer loop: straight-line cache updates alias in place
+        # (scan-carry aliasing keeps a full cache copy on some backends)
+        return SV.decode_step(params, tokens, caches, pos, cfg, shd,
+                              unroll=not perf.scan_layers,
+                              moe_groups=perf.moe_groups)
+
+    jt = jax.jit(
+        decode_fn,
+        in_shardings=(_named(mesh, pspecs),
+                      NamedSharding(mesh, P(shd.data_axes, None)),
+                      _named(mesh, cspecs),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, P(shd.data_axes, "model")),
+                       _named(mesh, cspecs)),
+        donate_argnums=(2,))
+    return jt, (psds, tok_sds, csds, pos_sds)
+
+
+def _retarget_cache_specs(cspecs, shd: Sharder):
+    """Rewrite cache specs onto the sharder's (data_axes, seq_axes)."""
+    import jax.tree_util as jtu
+
+    def one(path, spec):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        if name in ("k", "v", "k_q", "v_q"):
+            return P(None, shd.data_axes, shd.seq_axes, None, None)
+        if name in ("k_s", "v_s"):
+            return P(None, shd.data_axes, shd.seq_axes, None)
+        if name in ("cross_k", "cross_v"):
+            return P(None, shd.data_axes, None, None, None)
+        if name in ("c_kv", "k_rope"):
+            return P(None, shd.data_axes, shd.seq_axes, None)
+        if name == "conv":
+            return P(None, shd.data_axes, None, shd.seq_axes)
+        if name == "h":
+            return P(None, shd.data_axes, shd.seq_axes, None)
+        return spec
+
+    return jtu.tree_map_with_path(one, cspecs,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,2 @@
+"""LM model substrate: the 10 assigned architectures as composable JAX
+modules (pure functions over parameter pytrees; sharding via a Sharder)."""

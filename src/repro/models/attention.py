@@ -1,0 +1,313 @@
+"""GQA attention: train/prefill (full or kv-chunked flash-style) + decode.
+
+Decode keeps a KV cache sharded over the 'model' axis on the SEQUENCE dim
+(flash-decoding layout): softmax max/sum and the weighted-V contraction
+reduce over the sharded axis, which GSPMD turns into small all-reduces —
+this scales to kv_heads < model-axis size (e.g. 8 KV heads on 16-way TP),
+where head sharding cannot.
+
+Sliding-window attention uses a ring-buffer cache of window size W with an
+explicit per-slot position vector, so long_500k decodes with O(W) state.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import rope as rope_mod
+from repro.models.layers import NOSHARD, Sharder, dense_init
+
+NEG = -1e30
+
+
+def attn_init(key, cfg: ArchConfig, dtype=jnp.float32, d_model: int = 0
+              ) -> dict:
+    d = d_model or cfg.d_model
+    dh = cfg.head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, d, cfg.n_heads * dh, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(ko, cfg.n_heads * dh, d, dtype,
+                         scale=(cfg.n_heads * dh) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * dh,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * dh,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * dh,), dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg: ArchConfig, shd: Sharder):
+    B, S, _ = x.shape
+    dh = cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    # constrain the FLAT projection (always divisible by the model axis even
+    # when n_heads is not, e.g. phi3's 40 heads on 16-way TP); GSPMD
+    # propagates a layout through the reshape
+    q = shd.btf(q).reshape(B, S, cfg.n_heads, dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, dh)
+    return q, k, v
+
+
+def _rope(x, positions, cfg: ArchConfig):
+    if cfg.mrope_sections is not None:
+        pos3 = positions if positions.ndim == 3 \
+            else rope_mod.text_positions3(positions)
+        return rope_mod.apply_mrope(x, pos3, cfg.mrope_sections,
+                                    cfg.rope_theta)
+    return rope_mod.apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _full_attention(q, k, v, cfg: ArchConfig, causal: bool):
+    B, S, H, dh = q.shape
+    hkv = k.shape[2]
+    rep = H // hkv
+    qf = q.astype(jnp.float32).reshape(B, S, hkv, rep, dh)
+    scores = jnp.einsum("bqhrd,bkhd->bhrqk", qf, k.astype(jnp.float32))
+    scores *= dh ** -0.5
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kj <= qi
+    if cfg.sliding_window is not None:
+        mask &= kj > qi - cfg.sliding_window
+    scores = jnp.where(mask[None, None, None], scores, NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, cfg: ArchConfig, chunk: int):
+    """Flash-style online softmax over KV chunks (jnp; XLA-compiled path).
+
+    Memory O(B * H * S * chunk) instead of O(B * H * S^2) — this is what the
+    32k prefill cells lower; the Pallas kernel is the TPU-native equivalent.
+    """
+    B, S, H, dh = q.shape
+    hkv = k.shape[2]
+    rep = H // hkv
+    n_chunks = S // chunk
+    qf = q.astype(jnp.float32).reshape(B, S, hkv, rep, dh) * dh ** -0.5
+    kc = k.astype(jnp.float32).reshape(B, n_chunks, chunk, hkv, dh)
+    vc = v.astype(jnp.float32).reshape(B, n_chunks, chunk, hkv, dh)
+    kc = jnp.moveaxis(kc, 1, 0)                  # [nc, B, chunk, hkv, dh]
+    vc = jnp.moveaxis(vc, 1, 0)
+    qi = jnp.arange(S)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, ci = xs
+        kj = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kb)
+        mask = kj[None, :] <= qi[:, None]
+        if cfg.sliding_window is not None:
+            mask &= kj[None, :] > qi[:, None] - cfg.sliding_window
+        s = jnp.where(mask[None, None, None], s, NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.where(mask[None, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(m - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhrqk,bkhd->bhrqd", p, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, hkv, rep, S), NEG, jnp.float32)
+    l0 = jnp.zeros((B, hkv, rep, S), jnp.float32)
+    a0 = jnp.zeros((B, hkv, rep, S, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(B, S, H, dh)
+    return out.astype(q.dtype)
+
+
+def attn_train(params, x, positions, cfg: ArchConfig, shd: Sharder = NOSHARD,
+               *, causal: bool = True, chunk: Optional[int] = None,
+               d_model: int = 0):
+    """Full-sequence attention; returns [B, S, d]."""
+    q, k, v = _project_qkv(params, x, cfg, shd)
+    q = _rope(q, positions, cfg)
+    k = _rope(k, positions, cfg)
+    if chunk is not None and causal and x.shape[1] % chunk == 0 \
+            and x.shape[1] > chunk:
+        out = _chunked_attention(q, k, v, cfg, chunk)
+    else:
+        out = _full_attention(q, k, v, cfg, causal)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return shd.btd(out)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.float32,
+               quantized: bool = False) -> dict:
+    """Ring buffer of W = sliding_window if set, else max_seq.
+
+    quantized=True stores K/V as int8 with per-(token, head) symmetric
+    scales (KIVI-style, beyond-paper): halves the cache footprint and the
+    decode read traffic.  The scales factor EXACTLY out of both attention
+    contractions (s = (q . k_q) * scale_k; out = (p * scale_v) . v_q), so
+    the only approximation is the int8 rounding itself.
+    """
+    W = min(cfg.sliding_window or max_seq, max_seq)
+    dh = cfg.head_dim
+    if quantized:
+        return {
+            "k_q": jnp.zeros((batch, W, cfg.n_kv_heads, dh), jnp.int8),
+            "v_q": jnp.zeros((batch, W, cfg.n_kv_heads, dh), jnp.int8),
+            "k_s": jnp.zeros((batch, W, cfg.n_kv_heads), jnp.float32),
+            "v_s": jnp.zeros((batch, W, cfg.n_kv_heads), jnp.float32),
+            "slot_pos": jnp.full((W,), -1, jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((batch, W, cfg.n_kv_heads, dh), dtype),
+        "v": jnp.zeros((batch, W, cfg.n_kv_heads, dh), dtype),
+        "slot_pos": jnp.full((W,), -1, jnp.int32),
+    }
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x [B, S, h, dh] -> (int8 values, f32 per-(token, head) scales)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def prefill_into_cache(params, x, positions, cfg: ArchConfig,
+                       shd: Sharder = NOSHARD, cache: Optional[dict] = None,
+                       chunk: Optional[int] = None):
+    """Causal attention over the prompt; fills the cache. Returns (out, cache)."""
+    q, k, v = _project_qkv(params, x, cfg, shd)
+    q = _rope(q, positions, cfg)
+    k = _rope(k, positions, cfg)
+    if chunk is not None and x.shape[1] % chunk == 0 and x.shape[1] > chunk:
+        out = _chunked_attention(q, k, v, cfg, chunk)
+    else:
+        out = _full_attention(q, k, v, cfg, causal=True)
+    B, S = x.shape[:2]
+    if cache is not None:
+        quant = "k_q" in cache
+        if quant:
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            store = {"k_q": kq, "v_q": vq, "k_s": ks, "v_s": vs}
+        else:
+            store = {"k": k, "v": v}
+        W = cache[next(iter(store))].shape[1]
+        if S >= W:
+            # keep the last W keys in ring layout: slot i <- position p,
+            # p % W == i (prefill positions are contiguous, so this is a
+            # permutation of the tail slice)
+            last_pos = positions[0, S - W:].astype(jnp.int32)     # [W]
+            slots = last_pos % W
+            cache = {key: shd.kv_cache(jnp.zeros_like(cache[key])
+                                       .at[:, slots].set(
+                         val[:, S - W:].astype(cache[key].dtype)))
+                     if val.ndim == 4 else
+                     jnp.zeros_like(cache[key]).at[:, slots].set(
+                         val[:, S - W:].astype(cache[key].dtype))
+                     for key, val in store.items()}
+            cache["slot_pos"] = jnp.full((W,), -1, jnp.int32) \
+                .at[slots].set(last_pos)
+        else:
+            # prompt shorter than the window: slots [0, S) in order
+            new = {}
+            for key, val in store.items():
+                upd = jax.lax.dynamic_update_slice_in_dim(
+                    jnp.zeros_like(cache[key]),
+                    val.astype(cache[key].dtype), 0, 1)
+                new[key] = shd.kv_cache(upd) if val.ndim == 4 else upd
+            new["slot_pos"] = cache["slot_pos"].at[:S].set(
+                positions[0].astype(jnp.int32))
+            cache = new
+    out = out.reshape(B, S, -1) @ params["wo"]
+    return shd.btd(out), cache
+
+
+def attn_decode(params, x, cache: dict, pos, cfg: ArchConfig,
+                shd: Sharder = NOSHARD):
+    """One-token step. x: [B, 1, d]; pos: scalar int32 (shared by batch).
+
+    Returns (out [B, 1, d], cache').
+    """
+    B = x.shape[0]
+    dh = cfg.head_dim
+    q, k, v = _project_qkv(params, x, cfg, shd)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+    q = _rope(q, pos_b, cfg)
+    k = _rope(k, pos_b, cfg)
+    quant = "k_q" in cache
+
+    W = cache["slot_pos"].shape[0]
+    slot = jnp.asarray(pos, jnp.int32) % W
+    spos = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], jnp.asarray(pos, jnp.int32)[None], slot, 0)
+
+    hkv = cfg.n_kv_heads
+    rep = cfg.n_heads // hkv
+    qf = q.reshape(B, hkv, rep, dh)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ck = shd.kv_cache(jax.lax.dynamic_update_slice_in_dim(
+            cache["k_q"], kq, slot, 1))
+        cv = shd.kv_cache(jax.lax.dynamic_update_slice_in_dim(
+            cache["v_q"], vq, slot, 1))
+        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_s"], ks, slot, 1)
+        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_s"], vs, slot, 1)
+        # the per-token scale factors EXACTLY out of the contraction
+        s = jnp.einsum("bhrd,bkhd->bhrk", qf.astype(jnp.bfloat16),
+                       ck.astype(jnp.bfloat16),
+                       preferred_element_type=jnp.float32)
+        s = s * jnp.moveaxis(cks, 1, 2)[:, :, None] * dh ** -0.5
+        new_cache = {"k_q": ck, "v_q": cv, "k_s": cks, "v_s": cvs,
+                     "slot_pos": spos}
+    else:
+        ck = shd.kv_cache(jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k, slot, 1))
+        cv = shd.kv_cache(jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v, slot, 1))
+        # contract in the cache dtype with f32 ACCUMULATION (no material-
+        # ized f32 cache copy)
+        s = jnp.einsum("bhrd,bkhd->bhrk", qf, ck,
+                       preferred_element_type=jnp.float32) * dh ** -0.5
+        new_cache = {"k": ck, "v": cv, "slot_pos": spos}
+
+    valid = (spos >= 0) & (spos <= pos)
+    if cfg.sliding_window is not None:
+        valid &= spos > pos - cfg.sliding_window
+    s = jnp.where(valid[None, None, None], s, NEG)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[None, None, None], p, 0.0)
+    if quant:
+        pv = p * jnp.moveaxis(cvs, 1, 2)[:, :, None]      # fold v scales
+        out = jnp.einsum("bhrk,bkhd->bhrd", pv.astype(jnp.bfloat16),
+                         cv.astype(jnp.bfloat16),
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bhrk,bkhd->bhrd", p.astype(cv.dtype), cv,
+                         preferred_element_type=jnp.float32)
+    out = out / p.sum(axis=-1, keepdims=True)
+    out = out.reshape(B, 1, cfg.n_heads * dh).astype(x.dtype) @ params["wo"]
+    return shd.btd(out), new_cache

@@ -1,0 +1,150 @@
+"""Shared layers: norms, projections, SwiGLU MLP, embeddings, Sharder."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Sharder: activation sharding constraints, no-op off-mesh (CPU smoke tests)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Sharder:
+    """Applies with_sharding_constraint when a mesh is active.
+
+    Axis names: 'data' (DP/FSDP), 'model' (TP/EP/SP); 'pod' extends data.
+    ``data_axes`` lets the launcher map batch to ('pod','data') multi-pod.
+    ``seq_axes`` is the cache-sequence shard axis — 'model' by default
+    (flash-decoding layout); for tiny-batch cells (long_500k, B=1) the
+    launcher sets data_axes=None and seq_axes=('data','model') so the whole
+    mesh shards the sequence/state instead of idling on an unsplittable
+    batch axis.
+    """
+    mesh: Any = None
+    data_axes: Any = "data"
+    model_axes: Any = "model"
+    seq_axes: Any = None          # defaults to model_axes
+
+    def __post_init__(self):
+        if self.seq_axes is None:
+            self.seq_axes = self.model_axes
+
+    def _c(self, x, spec):
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, spec))
+
+    # common activation layouts
+    def btd(self, x):        # [batch, seq, d_model]
+        return self._c(x, P(self.data_axes, None, None))
+
+    def bthd(self, x):       # [batch, seq, heads, head_dim]
+        return self._c(x, P(self.data_axes, None, self.model_axes, None))
+
+    def btf(self, x):        # [batch, seq, d_ff-sharded]
+        return self._c(x, P(self.data_axes, None, self.model_axes))
+
+    def btv(self, x):        # logits [batch, seq, vocab-sharded]
+        return self._c(x, P(self.data_axes, None, self.model_axes))
+
+    def bv(self, x):         # last-position logits [batch, vocab-sharded]
+        return self._c(x, P(self.data_axes, self.model_axes))
+
+    def kv_cache(self, x):   # [batch, seq, kv_heads, head_dim] seq-sharded
+        return self._c(x, P(self.data_axes, self.seq_axes, None, None))
+
+    def latent_cache(self, x):  # MLA compressed cache [batch, seq, lora]
+        return self._c(x, P(self.data_axes, self.seq_axes, None))
+
+    def ssm_state(self, x):  # [batch, d_inner-sharded, state]
+        return self._c(x, P(self.data_axes, self.seq_axes, None))
+
+    def expert_buf(self, x):  # [groups, experts, capacity, d]
+        # G over 'data' (group-local GShard dispatch) and E over 'model'
+        # (expert parallelism): the whole mesh computes the expert GEMMs.
+        # Without the group split the data axis either REPLICATES the
+        # expert FLOPs (16x bloat) or all-gathers the scatter operands —
+        # both measured in EXPERIMENTS.md §Perf.
+        return self._c(x, P(self.data_axes, self.model_axes, None, None))
+
+
+NOSHARD = Sharder(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: float | None = None) -> jax.Array:
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layernorm(x: jax.Array, w: jax.Array, b: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> jax.Array:
+    return jnp.ones((d,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (LLaMA-style); GELU MLP (whisper)
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, d, d_ff, dtype),
+        "w_up": dense_init(k2, d, d_ff, dtype),
+        "w_down": dense_init(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu(params: dict, x: jax.Array, shd: Sharder = NOSHARD) -> jax.Array:
+    g = shd.btf(x @ params["w_gate"])
+    u = shd.btf(x @ params["w_up"])
+    h = jax.nn.silu(g) * u
+    return shd.btd(h @ params["w_down"])
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w_up": dense_init(k1, d, d_ff, dtype),
+        "b_up": jnp.zeros((d_ff,), dtype),
+        "w_down": dense_init(k2, d_ff, d, dtype),
+        "b_down": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(params: dict, x: jax.Array, shd: Sharder = NOSHARD) -> jax.Array:
+    h = shd.btf(jax.nn.gelu(x @ params["w_up"] + params["b_up"]))
+    return shd.btd(h @ params["w_down"] + params["b_down"])

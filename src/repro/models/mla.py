@@ -1,0 +1,212 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are compressed into a rank-``kv_lora`` latent c_kv plus a shared
+``qk_rope``-dim decoupled rotary key.  Training expands K/V and runs
+standard attention; decode uses the *absorbed* form — w_uk folds into the
+query and w_uv into the output — so the per-token cache is only
+(kv_lora + qk_rope) floats, MLA's entire point:
+
+    score_t = q_nope^T W_uk c_t + q_rope^T k_rope_t
+    out     = (sum_t p_t c_t) W_uv
+
+The compressed cache is sharded over 'model' on the SEQUENCE axis (as in
+attention.py): with one latent head, sequence sharding is the only option —
+and exactly what flash-decoding wants.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import rope as rope_mod
+from repro.models.layers import NOSHARD, Sharder, dense_init, rmsnorm, \
+    rmsnorm_init
+
+NEG = -1e30
+
+
+def mla_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    keys = jax.random.split(key, 6)
+    p = {}
+    if m.q_lora:
+        p["wq_a"] = dense_init(keys[0], d, m.q_lora, dtype)
+        p["q_norm"] = rmsnorm_init(m.q_lora, dtype)
+        p["wq_b"] = dense_init(keys[1], m.q_lora,
+                               H * (m.qk_nope + m.qk_rope), dtype)
+    else:
+        p["wq"] = dense_init(keys[0], d, H * (m.qk_nope + m.qk_rope), dtype)
+    p["wkv_a"] = dense_init(keys[2], d, m.kv_lora + m.qk_rope, dtype)
+    p["kv_norm"] = rmsnorm_init(m.kv_lora, dtype)
+    p["wkv_b"] = dense_init(keys[3], m.kv_lora, H * (m.qk_nope + m.v_dim),
+                            dtype)
+    p["wo"] = dense_init(keys[4], H * m.v_dim, d, dtype,
+                         scale=(H * m.v_dim) ** -0.5)
+    return p
+
+
+def _queries(params, x, positions, cfg: ArchConfig, shd: Sharder):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    if m.q_lora:
+        cq = rmsnorm(x @ params["wq_a"], params["q_norm"], cfg.norm_eps)
+        q = cq @ params["wq_b"]
+    else:
+        q = x @ params["wq"]
+    q = shd.btf(q).reshape(B, S, H, m.qk_nope + m.qk_rope)
+    q_nope = q[..., :m.qk_nope]
+    q_rope = rope_mod.apply_rope(q[..., m.qk_nope:], positions,
+                                 cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(params, x, positions, cfg: ArchConfig):
+    m = cfg.mla
+    kv = x @ params["wkv_a"]                           # [B, S, lora+rope]
+    c_kv = rmsnorm(kv[..., :m.kv_lora], params["kv_norm"], cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora:][:, :, None, :]        # single shared head
+    k_rope = rope_mod.apply_rope(k_rope, positions, cfg.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_train(params, x, positions, cfg: ArchConfig, shd: Sharder = NOSHARD,
+              *, chunk: Optional[int] = None):
+    """Expanded-KV attention (training / prefill compute path)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _queries(params, x, positions, cfg, shd)
+    c_kv, k_rope = _latents(params, x, positions, cfg)
+    kv = (c_kv @ params["wkv_b"]).reshape(B, S, H, m.qk_nope + m.v_dim)
+    k_nope = kv[..., :m.qk_nope]
+    v = kv[..., m.qk_nope:]
+
+    scale = (m.qk_nope + m.qk_rope) ** -0.5
+    qf = jnp.concatenate([q_nope, q_rope], -1).astype(jnp.float32)
+    kf = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None], k_nope.shape[:3]
+                                  + (m.qk_rope,))], -1).astype(jnp.float32)
+    if chunk is not None and S % chunk == 0 and S > chunk:
+        out = _chunked_mla(qf, kf, v.astype(jnp.float32), scale, chunk)
+    else:
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
+        qi = jnp.arange(S)
+        mask = qi[None, :] <= qi[:, None]
+        s = jnp.where(mask[None, None], s, NEG)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(B, S, H * m.v_dim) @ params["wo"]
+    return shd.btd(out)
+
+
+def _chunked_mla(qf, kf, vf, scale, chunk):
+    """Online-softmax over KV chunks (same recurrence as attention.py)."""
+    B, S, H, dk = qf.shape
+    dv = vf.shape[-1]
+    nc = S // chunk
+    kc = jnp.moveaxis(kf.reshape(B, nc, chunk, H, dk), 1, 0)
+    vc = jnp.moveaxis(vf.reshape(B, nc, chunk, H, dv), 1, 0)
+    qi = jnp.arange(S)
+    qs = qf * scale
+
+    def body(carry, xs):
+        mx, l, acc = carry
+        kb, vb, ci = xs
+        kj = ci * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qs, kb)
+        mask = kj[None, :] <= qi[:, None]
+        s = jnp.where(mask[None, None], s, NEG)
+        m_new = jnp.maximum(mx, s.max(axis=-1))
+        p = jnp.where(mask[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.exp(mx - m_new)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S), NEG, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    a0 = jnp.zeros((B, H, S, dv), jnp.float32)
+    (mx, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                   (kc, vc, jnp.arange(nc)))
+    out = acc / jnp.where(l == 0, 1.0, l)[..., None]
+    return jnp.moveaxis(out, 1, 2)                     # [B, S, H, dv]
+
+
+# ---------------------------------------------------------------------------
+# compressed cache: prefill + absorbed decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.float32
+               ) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, m.kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, m.qk_rope), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_prefill(params, x, positions, cfg: ArchConfig,
+                shd: Sharder = NOSHARD, cache: Optional[dict] = None,
+                chunk: Optional[int] = None):
+    out = mla_train(params, x, positions, cfg, shd, chunk=chunk)
+    if cache is not None:
+        S = x.shape[1]
+        c_kv, k_rope = _latents(params, x, positions, cfg)
+        cache = {
+            "c_kv": shd.latent_cache(jax.lax.dynamic_update_slice_in_dim(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), 0, 1)),
+            "k_rope": shd.latent_cache(jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), 0, 1)),
+            "len": jnp.asarray(S, jnp.int32),
+        }
+    return out, cache
+
+
+def mla_decode(params, x, cache: dict, pos, cfg: ArchConfig,
+               shd: Sharder = NOSHARD):
+    """Absorbed one-token step on the compressed cache."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32)[None, None], (B, 1))
+    q_nope, q_rope = _queries(params, x, pos_b, cfg, shd)   # [B,1,H,*]
+    c_new, kr_new = _latents(params, x, pos_b, cfg)
+
+    S = cache["c_kv"].shape[1]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype),
+        jnp.asarray(pos, jnp.int32), 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype),
+        jnp.asarray(pos, jnp.int32), 1)
+    c_kv = shd.latent_cache(c_kv)
+    k_rope = shd.latent_cache(k_rope)
+
+    # absorb: q_nope' = q_nope @ W_uk  (per head, into latent space)
+    w_b = params["wkv_b"].reshape(m.kv_lora, H, m.qk_nope + m.v_dim)
+    w_uk = w_b[..., :m.qk_nope]                       # [lora, H, nope]
+    w_uv = w_b[..., m.qk_nope:]                       # [lora, H, v]
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))      # [B, H, lora]
+
+    scale = (m.qk_nope + m.qk_rope) ** -0.5
+    s = (jnp.einsum("bhl,bsl->bhs", q_lat, c_kv.astype(jnp.float32))
+         + jnp.einsum("bhd,bsd->bhs", q_rope[:, 0].astype(jnp.float32),
+                      k_rope.astype(jnp.float32))) * scale
+    valid = jnp.arange(S) <= pos
+    s = jnp.where(valid[None, None], s, NEG)
+    mx = s.max(axis=-1, keepdims=True)
+    p = jnp.where(valid[None, None], jnp.exp(s - mx), 0.0)
+    lat = jnp.einsum("bhs,bsl->bhl", p, c_kv.astype(jnp.float32))
+    lat = lat / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhl,lhv->bhv", lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * m.v_dim).astype(x.dtype) @ params["wo"]
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope,
+                 "len": jnp.asarray(pos, jnp.int32) + 1}
+    return shd.btd(out), new_cache

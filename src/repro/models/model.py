@@ -1,0 +1,408 @@
+"""Model assembly: init / train / prefill / decode for all 10 architectures.
+
+Families:
+  dense   — pre-norm GQA transformer (stablelm, phi3, codeqwen, danube, qwen2-vl)
+  moe     — DeepSeek-V2(-lite): MLA attention + shared/routed MoE FFN
+  ssm     — falcon-mamba: pure Mamba-1 stack
+  hybrid  — zamba2: Mamba-2 backbone + ONE shared attn+MLP block re-applied
+            every ``attn_every`` layers (weight re-use, as in the paper)
+  encdec  — whisper: bidirectional encoder (stub audio embeddings) +
+            causal decoder with cross attention
+
+All layer stacks are jax.lax.scan'd over stacked parameters so the traced
+HLO is one-layer-sized, with jax.checkpoint (remat) around the block body.
+Vision/audio frontends are STUBS per the assignment: ``prefix_embeds`` /
+``audio_embeds`` arrive as precomputed activations from input_specs().
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (NOSHARD, Sharder, dense_init, embed_init,
+                                 gelu_mlp, gelu_mlp_init, layernorm, rmsnorm,
+                                 rmsnorm_init, swiglu, swiglu_init)
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfConfig:
+    """Per-cell performance knobs (the hillclimbing surface)."""
+    remat: str = "full"           # none | full | dots
+    attn_chunk: Optional[int] = None   # kv-chunked attention block size
+    accum_steps: int = 1          # gradient accumulation microbatches
+    scan_layers: bool = True
+    parallelism: str = "2d"       # 2d   = TP over 'model' + DP/FSDP 'data'
+    #                               fsdp = pure ZeRO-3 over the WHOLE mesh
+    #                               (batch over data x model; no TP
+    #                               activation all-reduces — wins for models
+    #                               whose layers are too small to shard)
+    moe_groups: int = 1           # GShard dispatch groups (= data width on
+    #                               the production mesh; 1 = global routing)
+    kv_quant: bool = False        # int8 KV cache (KIVI-style, dense archs)
+    opt_moments: str = "f32"      # bf16 halves optimizer-state HBM
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "full":
+        return jax.checkpoint(fn)
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if policy == "dots_nb":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    raise ValueError(policy)
+
+
+def _norm(x, p, cfg: ArchConfig):
+    if cfg.norm_type == "layernorm":
+        return layernorm(x, p["w"], p["b"], cfg.norm_eps)
+    return rmsnorm(x, p["w"], cfg.norm_eps)
+
+
+def _norm_init(d, cfg: ArchConfig, dtype):
+    if cfg.norm_type == "layernorm":
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": rmsnorm_init(d, dtype)}
+
+
+def _stacked(init_one, key, n: int):
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+def vocab_padded(cfg: ArchConfig) -> int:
+    """Embedding/vocab dim padded to a multiple of 256 so the vocab axis
+    shards evenly on any mesh axis (whisper's 51865 is the only assigned
+    vocab that needs it).  Labels never index the padding; the padded
+    logits are real (trainable) rows, which is standard practice."""
+    return -(-cfg.vocab // 256) * 256
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.float32) -> dict:
+    keys = jax.random.split(key, 8)
+    d = cfg.d_model
+    vp = vocab_padded(cfg)
+    p: dict = {
+        "embed": embed_init(keys[0], vp, d, dtype),
+        "lm_head": dense_init(keys[1], d, vp, dtype),
+        "final_norm": _norm_init(d, cfg, dtype),
+    }
+    if cfg.family == "dense":
+        def one(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "attn": attn_mod.attn_init(ks[0], cfg, dtype),
+                "mlp": swiglu_init(ks[1], d, cfg.d_ff, dtype),
+                "ln1": _norm_init(d, cfg, dtype),
+                "ln2": _norm_init(d, cfg, dtype),
+            }
+        p["layers"] = _stacked(one, keys[2], cfg.n_layers)
+    elif cfg.family == "moe":
+        nd = cfg.moe.first_dense
+        d_ff_dense = cfg.moe.d_ff_dense or 4 * d
+
+        def one_dense(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "attn": mla_mod.mla_init(ks[0], cfg, dtype),
+                "mlp": swiglu_init(ks[1], d, d_ff_dense, dtype),
+                "ln1": _norm_init(d, cfg, dtype),
+                "ln2": _norm_init(d, cfg, dtype),
+            }
+
+        def one_moe(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "attn": mla_mod.mla_init(ks[0], cfg, dtype),
+                "moe": moe_mod.moe_init(ks[1], cfg, dtype),
+                "ln1": _norm_init(d, cfg, dtype),
+                "ln2": _norm_init(d, cfg, dtype),
+            }
+        p["dense_layers"] = _stacked(one_dense, keys[2], nd)
+        p["layers"] = _stacked(one_moe, keys[3], cfg.n_layers - nd)
+    elif cfg.family == "ssm":
+        def one(k):
+            return {
+                "ssm": ssm_mod.ssm_init(k, cfg, dtype),
+                "ln": _norm_init(d, cfg, dtype),
+            }
+        p["layers"] = _stacked(one, keys[2], cfg.n_layers)
+    elif cfg.family == "hybrid":
+        def one(k):
+            return {
+                "ssm": ssm_mod.ssm_init(k, cfg, dtype),
+                "ln": _norm_init(d, cfg, dtype),
+            }
+        p["layers"] = _stacked(one, keys[2], cfg.n_layers)
+        ks = jax.random.split(keys[3], 2)
+        p["shared_block"] = {
+            "attn": attn_mod.attn_init(ks[0], cfg, dtype),
+            "mlp": swiglu_init(ks[1], d, cfg.d_ff, dtype),
+            "ln1": _norm_init(d, cfg, dtype),
+            "ln2": _norm_init(d, cfg, dtype),
+        }
+    elif cfg.family == "encdec":
+        def one_enc(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "attn": attn_mod.attn_init(ks[0], cfg, dtype),
+                "mlp": gelu_mlp_init(ks[1], d, cfg.d_ff, dtype),
+                "ln1": _norm_init(d, cfg, dtype),
+                "ln2": _norm_init(d, cfg, dtype),
+            }
+
+        def one_dec(k):
+            ks = jax.random.split(k, 3)
+            return {
+                "self_attn": attn_mod.attn_init(ks[0], cfg, dtype),
+                "cross_attn": attn_mod.attn_init(ks[1], cfg, dtype),
+                "mlp": gelu_mlp_init(ks[2], d, cfg.d_ff, dtype),
+                "ln1": _norm_init(d, cfg, dtype),
+                "ln2": _norm_init(d, cfg, dtype),
+                "ln3": _norm_init(d, cfg, dtype),
+            }
+        p["enc_layers"] = _stacked(one_enc, keys[2], cfg.n_enc_layers)
+        p["layers"] = _stacked(one_dec, keys[3], cfg.n_layers)
+        p["enc_norm"] = _norm_init(d, cfg, dtype)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ===========================================================================
+# blocks (train/prefill path)
+# ===========================================================================
+
+def _dense_block(lp, x, positions, cfg, shd, chunk):
+    h = attn_mod.attn_train(lp["attn"], _norm(x, lp["ln1"], cfg), positions,
+                            cfg, shd, chunk=chunk)
+    x = x + h
+    x = x + swiglu(lp["mlp"], _norm(x, lp["ln2"], cfg), shd)
+    return x
+
+
+def _mla_dense_block(lp, x, positions, cfg, shd, chunk):
+    h = mla_mod.mla_train(lp["attn"], _norm(x, lp["ln1"], cfg), positions,
+                          cfg, shd, chunk=chunk)
+    x = x + h
+    x = x + swiglu(lp["mlp"], _norm(x, lp["ln2"], cfg), shd)
+    return x
+
+
+def _moe_block(lp, x, positions, cfg, shd, chunk, groups=1):
+    h = mla_mod.mla_train(lp["attn"], _norm(x, lp["ln1"], cfg), positions,
+                          cfg, shd, chunk=chunk)
+    x = x + h
+    y, aux = moe_mod.moe_ffn(lp["moe"], _norm(x, lp["ln2"], cfg), cfg, shd,
+                             groups=groups)
+    return x + y, aux
+
+
+def _ssm_block(lp, x, cfg, shd):
+    return x + ssm_mod.ssm_train(lp["ssm"], _norm(x, lp["ln"], cfg), cfg, shd)
+
+
+def _shared_attn_block(sp, x, positions, cfg, shd, chunk):
+    h = attn_mod.attn_train(sp["attn"], _norm(x, sp["ln1"], cfg), positions,
+                            cfg, shd, chunk=chunk)
+    x = x + h
+    x = x + swiglu(sp["mlp"], _norm(x, sp["ln2"], cfg), shd)
+    return x
+
+
+def _whisper_sinusoid(S: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None]
+    ang = pos * jnp.exp(-i * jnp.log(10000.0) / (d // 2 - 1))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def encode(params, audio_embeds, cfg: ArchConfig, shd: Sharder = NOSHARD,
+           perf: PerfConfig = PerfConfig()) -> jax.Array:
+    """Whisper encoder over stub frame embeddings [B, F, d]."""
+    B, F, d = audio_embeds.shape
+    x = audio_embeds + _whisper_sinusoid(F, d, audio_embeds.dtype)
+    pos = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+    def body(x, lp):
+        def blk(lp, x):
+            h = attn_mod.attn_train(lp["attn"], _norm(x, lp["ln1"], cfg),
+                                    pos, cfg, shd, causal=False)
+            x = x + h
+            return x + gelu_mlp(lp["mlp"], _norm(x, lp["ln2"], cfg), shd)
+        return _remat(blk, perf.remat)(lp, x), None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return _norm(x, params["enc_norm"], cfg)
+
+
+def _dec_block(lp, x, enc_out, positions, enc_pos, cfg, shd, chunk):
+    h = attn_mod.attn_train(lp["self_attn"], _norm(x, lp["ln1"], cfg),
+                            positions, cfg, shd, chunk=chunk)
+    x = x + h
+    # cross attention: queries from decoder, K/V from encoder output
+    xq = _norm(x, lp["ln2"], cfg)
+    h = _cross_attn(lp["cross_attn"], xq, enc_out, positions, enc_pos,
+                    cfg, shd)
+    x = x + h
+    return x + gelu_mlp(lp["mlp"], _norm(x, lp["ln3"], cfg), shd)
+
+
+def _cross_attn(p, xq, enc_out, positions, enc_pos, cfg, shd):
+    B, S, _ = xq.shape
+    F = enc_out.shape[1]
+    dh = cfg.head_dim
+    q = (xq @ p["wq"]).reshape(B, S, cfg.n_heads, dh)
+    k = (enc_out @ p["wk"]).reshape(B, F, cfg.n_kv_heads, dh)
+    v = (enc_out @ p["wv"]).reshape(B, F, cfg.n_kv_heads, dh)
+    hkv = cfg.n_kv_heads
+    rep = cfg.n_heads // hkv
+    qf = q.astype(jnp.float32).reshape(B, S, hkv, rep, dh)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, k.astype(jnp.float32))
+    s = s * dh ** -0.5
+    pp = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhrqk,bkhd->bqhrd", pp, v.astype(jnp.float32))
+    out = out.reshape(B, S, cfg.n_heads * dh).astype(xq.dtype) @ p["wo"]
+    return shd.btd(out)
+
+
+# ===========================================================================
+# forward (train): tokens -> logits, aux
+# ===========================================================================
+
+def forward(params: dict, batch: dict, cfg: ArchConfig,
+            shd: Sharder = NOSHARD, perf: PerfConfig = PerfConfig()
+            ) -> tuple[jax.Array, jax.Array]:
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.n_prefix_embeds and "prefix_embeds" in batch:
+        pe = batch["prefix_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, cfg.n_prefix_embeds:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = shd.btd(x)
+    aux = jnp.zeros((), jnp.float32)
+    chunk = perf.attn_chunk
+
+    if cfg.family in ("dense",):
+        def body(carry, lp):
+            x, = carry
+            blk = _remat(functools.partial(
+                _dense_block, positions=positions, cfg=cfg, shd=shd,
+                chunk=chunk), perf.remat)
+            return (blk(lp, x),), None
+        (x,), _ = jax.lax.scan(body, (x,), params["layers"])
+    elif cfg.family == "moe":
+        def body_d(carry, lp):
+            x, = carry
+            blk = _remat(functools.partial(
+                _mla_dense_block, positions=positions, cfg=cfg, shd=shd,
+                chunk=chunk), perf.remat)
+            return (blk(lp, x),), None
+        (x,), _ = jax.lax.scan(body_d, (x,), params["dense_layers"])
+
+        def body_m(carry, lp):
+            x, aux = carry
+            blk = _remat(functools.partial(
+                _moe_block, positions=positions, cfg=cfg, shd=shd,
+                chunk=chunk, groups=perf.moe_groups), perf.remat)
+            y, a = blk(lp, x)
+            return (y, aux + a), None
+        (x, aux), _ = jax.lax.scan(body_m, (x, aux), params["layers"])
+    elif cfg.family == "ssm":
+        def body(carry, lp):
+            x, = carry
+            blk = _remat(functools.partial(_ssm_block, cfg=cfg, shd=shd),
+                         perf.remat)
+            return (blk(lp, x),), None
+        (x,), _ = jax.lax.scan(body, (x,), params["layers"])
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, x, positions, cfg, shd, perf)
+    elif cfg.family == "encdec":
+        enc_out = encode(params, batch["audio_embeds"], cfg, shd, perf)
+        enc_pos = jnp.broadcast_to(jnp.arange(enc_out.shape[1])[None],
+                                   enc_out.shape[:2])
+
+        def body(carry, lp):
+            x, = carry
+            blk = _remat(functools.partial(
+                _dec_block, enc_out=enc_out, positions=positions,
+                enc_pos=enc_pos, cfg=cfg, shd=shd, chunk=chunk), perf.remat)
+            return (blk(lp, x),), None
+        (x,), _ = jax.lax.scan(body, (x,), params["layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = _norm(x, params["final_norm"], cfg)
+    logits = shd.btv(x @ params["lm_head"])
+    return logits, aux
+
+
+def _hybrid_forward(params, x, positions, cfg, shd, perf):
+    """Zamba2: shared attn block every ``attn_every`` mamba layers."""
+    L = cfg.n_layers
+    per = cfg.attn_every
+    n_seg = max(L // per, 1)
+    layers = params["layers"]
+
+    def seg_slice(i):
+        return jax.tree_util.tree_map(lambda a: a[i * per:(i + 1) * per],
+                                      layers)
+
+    for seg in range(n_seg):
+        blk = _remat(functools.partial(
+            _shared_attn_block, positions=positions, cfg=cfg, shd=shd,
+            chunk=perf.attn_chunk), perf.remat)
+        x = blk(params["shared_block"], x)
+
+        def body(carry, lp):
+            x, = carry
+            b = _remat(functools.partial(_ssm_block, cfg=cfg, shd=shd),
+                       perf.remat)
+            return (b(lp, x),), None
+        (x,), _ = jax.lax.scan(body, (x,), seg_slice(seg))
+    # trailing layers if L % per != 0
+    rem = L - n_seg * per
+    if rem:
+        tail = jax.tree_util.tree_map(lambda a: a[n_seg * per:], layers)
+
+        def body(carry, lp):
+            x, = carry
+            b = _remat(functools.partial(_ssm_block, cfg=cfg, shd=shd),
+                       perf.remat)
+            return (b(lp, x),), None
+        (x,), _ = jax.lax.scan(body, (x,), tail)
+    return x
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+
+def loss_fn(params: dict, batch: dict, cfg: ArchConfig,
+            shd: Sharder = NOSHARD, perf: PerfConfig = PerfConfig()
+            ) -> tuple[jax.Array, dict]:
+    logits, aux = forward(params, batch, cfg, shd, perf)
+    labels = batch["labels"]
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold).mean()
+    loss = nll + aux
+    return loss, {"nll": nll, "aux": aux}

@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN (DeepSeek-V2 style: shared + fine-grained routed).
+
+Dispatch is sort-based with a capacity bound and — critically for the
+production mesh — GROUP-LOCAL in the GShard sense: tokens are split into
+``groups`` aligned with the data shards, each group routing into its own
+[E, cap_g, d] buffer slice.  Both the scatter operand (the group's tokens)
+and the target slice (group row of the buffer) live on the same device row,
+so dispatch crosses no links; the expert GEMM is batched over (G, E) with
+G on 'data' and E on 'model' — the whole mesh computes.  (The naive global
+scatter measured 16x replicated expert FLOPs or, with a 2D buffer, ~7x
+all-gathered scatter operands — see EXPERIMENTS.md §Perf.)
+
+groups=1 (the default, used by CPU tests) reproduces plain global-capacity
+routing.  Per-group capacity adds the standard GShard group-imbalance
+dropping; exactness tests set capacity_factor high to disable dropping.
+
+Aux load-balance loss (Switch-style) is returned for the train loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import NOSHARD, Sharder, dense_init, swiglu, \
+    swiglu_init
+
+
+def moe_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    m = cfg.moe
+    d = cfg.d_model
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    ek = jax.random.split(k_e, 3)
+    p = {
+        "router": dense_init(k_r, d, m.n_routed, jnp.float32),  # fp32 router
+        "experts": {
+            "w_gate": jax.vmap(
+                lambda k: dense_init(k, d, m.d_expert, dtype))(
+                jax.random.split(ek[0], m.n_routed)),
+            "w_up": jax.vmap(
+                lambda k: dense_init(k, d, m.d_expert, dtype))(
+                jax.random.split(ek[1], m.n_routed)),
+            "w_down": jax.vmap(
+                lambda k: dense_init(k, m.d_expert, d, dtype))(
+                jax.random.split(ek[2], m.n_routed)),
+        },
+    }
+    if m.n_shared:
+        p["shared"] = swiglu_init(k_s, d, m.n_shared * m.d_expert, dtype)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ArchConfig) -> int:
+    m = cfg.moe
+    cap = int(m.capacity_factor * tokens_per_group * m.top_k / m.n_routed)
+    return max(8, -(-cap // 8) * 8)        # round up to a lane-friendly size
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ArchConfig,
+            shd: Sharder = NOSHARD, groups: int = 1
+            ) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    G = groups if T % groups == 0 else 1
+    Tg = T // G
+    xt = x.reshape(G, Tg, d)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])      # [G, Tg, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = jax.lax.top_k(probs, m.top_k)                    # [G, Tg, k]
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)       # renormalize
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(ids[..., 0], m.n_routed, dtype=jnp.float32),
+        axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = m.n_routed * jnp.sum(frac_tokens * frac_probs) * m.aux_weight
+
+    # ---- group-local sort-based dispatch
+    K = m.top_k
+    cap = _capacity(Tg, cfg)
+    flat_ids = ids.reshape(G, Tg * K)
+    flat_w = w.reshape(G, Tg * K)
+    order = jnp.argsort(flat_ids, axis=1, stable=True)        # [G, Tg*K]
+    sorted_eids = jnp.take_along_axis(flat_ids, order, axis=1)
+    run_start = jax.vmap(
+        lambda s: jnp.searchsorted(s, s, side="left"))(sorted_eids)
+    pos = jnp.arange(Tg * K, dtype=jnp.int32)[None] \
+        - run_start.astype(jnp.int32)
+    token_of = (order // K).astype(jnp.int32)
+    keep = pos < cap
+    safe_pos = jnp.where(keep, pos, 0)
+
+    def scatter_group(xg, eids, spos, kp, tok):
+        buf = jnp.zeros((m.n_routed, cap, d), x.dtype)
+        return buf.at[eids, spos].add(
+            jnp.where(kp[:, None], xg[tok], 0).astype(x.dtype))
+
+    buf = jax.vmap(scatter_group)(xt, sorted_eids, safe_pos, keep, token_of)
+    buf = shd.expert_buf(buf)                                 # [G, E, cap, d]
+
+    # ---- batched expert SwiGLU: (G, E)-parallel over the whole mesh
+    e = params["experts"]
+    g = jnp.einsum("gecd,edf->gecf", buf, e["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, e["w_up"])
+    h = jax.nn.silu(g) * u
+    out_buf = shd.expert_buf(jnp.einsum("gecf,efd->gecd", h, e["w_down"]))
+
+    # ---- group-local combine
+    def gather_group(ob, eids, spos, kp, tok, wg):
+        vals = ob[eids, spos] * kp[:, None]
+        return jnp.zeros((Tg, d), jnp.float32).at[tok].add(
+            vals.astype(jnp.float32) * wg[:, None])
+
+    wsorted = jnp.take_along_axis(flat_w, order, axis=1)
+    y = jax.vmap(gather_group)(out_buf, sorted_eids, safe_pos, keep,
+                               token_of, wsorted)
+    y = y.astype(x.dtype).reshape(B, S, d)
+
+    if m.n_shared:
+        y = y + swiglu(params["shared"], x, shd)
+    return shd.btd(y), aux

@@ -1,0 +1,56 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the rotary half-dims into (temporal, height, width) sections,
+each rotated by its own position stream.  For text tokens the three streams
+coincide, so text-only behaviour equals standard RoPE — the structure is kept
+so the vision stub's 2D patch positions slot in unchanged.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4
+               ) -> jax.Array:
+    """x: [B, S, H, dh]; positions: [B, S] int32 -> same shape, rotated."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [B, S, dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, sections: tuple,
+                theta: float = 1e4) -> jax.Array:
+    """x: [B, S, H, dh]; positions3: [3, B, S] (t, h, w streams).
+
+    sections: per-stream counts of rotary half-dims, sum == dh // 2.
+    """
+    dh = x.shape[-1]
+    if sum(sections) != dh // 2:
+        raise ValueError(f"mrope sections {sections} != dh/2 = {dh // 2}")
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    # choose a position stream per half-dim
+    stream = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=dh // 2)    # [dh/2]
+    pos = positions3.astype(jnp.float32)                # [3, B, S]
+    pos_per_dim = pos[stream]                           # [dh/2, B, S]
+    ang = jnp.moveaxis(pos_per_dim, 0, -1) * freqs      # [B, S, dh/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_positions3(positions: jax.Array) -> jax.Array:
+    """[B, S] -> [3, B, S] with identical streams (text-only M-RoPE)."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)

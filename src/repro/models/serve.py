@@ -1,0 +1,383 @@
+"""Serving path: cache init, prefill, single-token decode for all families.
+
+Layer caches are stacked along a leading layer axis.  The layer loop is a
+lax.scan whose CARRY holds the full stacked cache, updated in place with
+``dynamic_update_index_in_dim`` — carried buffers alias across loop
+iterations, so a donated multi-GiB KV cache is updated without the 2x
+double-buffering that scan xs->ys staging would cost (verified via
+``memory_analysis`` in the dry-run; this is the MaxText decode pattern).
+
+Decode contract: one new token per sequence, a shared scalar position
+``pos``, KV caches sharded over 'model' on the sequence axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn_mod
+from repro.models import mla as mla_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import NOSHARD, Sharder, gelu_mlp, swiglu
+from repro.models.model import PerfConfig, _cross_attn, _norm, encode
+
+
+def _stack_caches(make_one, n: int):
+    one = make_one()
+    return jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), one)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                dtype=jnp.float32, kv_quant: bool = False) -> dict:
+    c: dict = {}
+    if cfg.family == "dense":
+        c["layers"] = _stack_caches(
+            lambda: attn_mod.init_cache(cfg, batch, max_seq, dtype,
+                                        quantized=kv_quant),
+            cfg.n_layers)
+    elif cfg.family == "moe":
+        nd = cfg.moe.first_dense
+        c["dense_layers"] = _stack_caches(
+            lambda: mla_mod.init_cache(cfg, batch, max_seq, dtype), nd)
+        c["layers"] = _stack_caches(
+            lambda: mla_mod.init_cache(cfg, batch, max_seq, dtype),
+            cfg.n_layers - nd)
+    elif cfg.family == "ssm":
+        c["layers"] = _stack_caches(
+            lambda: ssm_mod.init_state(cfg, batch, dtype), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_seg = max(cfg.n_layers // cfg.attn_every, 1)
+        c["layers"] = _stack_caches(
+            lambda: ssm_mod.init_state(cfg, batch, dtype), cfg.n_layers)
+        c["shared"] = _stack_caches(
+            lambda: attn_mod.init_cache(cfg, batch, max_seq, dtype), n_seg)
+    elif cfg.family == "encdec":
+        dh = cfg.head_dim
+        c["layers"] = _stack_caches(
+            lambda: attn_mod.init_cache(cfg, batch, max_seq, dtype),
+            cfg.n_layers)
+        c["cross_k"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.enc_seq, cfg.n_kv_heads, dh), dtype)
+        c["cross_v"] = jnp.zeros_like(c["cross_k"])
+    else:
+        raise ValueError(cfg.family)
+    return c
+
+
+def _scan_layers_with_cache(body_fn: Callable, x, layer_params, caches,
+                            unroll: bool = False):
+    """Walk stacked layer params; caches live in the CARRY (in-place).
+
+    body_fn(lp, x, cache_i) -> (x', new_cache_i)
+
+    ``unroll=True`` emits a straight-line python loop instead of lax.scan:
+    the chain of ``.at[i].set`` updates on a donated cache aliases with no
+    temp copy (XLA's while-loop carry aliasing is conservative on some
+    backends and keeps one full cache copy) — used by the decode step where
+    the KV cache dominates HBM.
+    """
+    if unroll:
+        L = jax.tree_util.tree_leaves(layer_params)[0].shape[0]
+        for i in range(L):
+            lp = jax.tree_util.tree_map(lambda a: a[i], layer_params)
+            cache_i = jax.tree_util.tree_map(lambda a: a[i], caches)
+            x, new_i = body_fn(lp, x, cache_i)
+            caches = jax.tree_util.tree_map(
+                lambda a, u: a.at[i].set(u.astype(a.dtype)), caches, new_i)
+        return x, caches
+
+    def body(carry, lp):
+        x, caches, i = carry
+        cache_i = jax.tree_util.tree_map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            caches)
+        x, new_i = body_fn(lp, x, cache_i)
+        caches = jax.tree_util.tree_map(
+            lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                a, u.astype(a.dtype), i, 0), caches, new_i)
+        return (x, caches, i + 1), None
+
+    (x, caches, _), _ = jax.lax.scan(
+        body, (x, caches, jnp.int32(0)), layer_params)
+    return x, caches
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+
+def prefill(params: dict, batch: dict, cfg: ArchConfig,
+            shd: Sharder = NOSHARD, perf: PerfConfig = PerfConfig(),
+            max_seq: int = 0) -> tuple[jax.Array, dict]:
+    """Prompt pass; returns (last-position logits [B, vocab_p], caches)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    dtype = params["embed"].dtype
+    caches = init_caches(cfg, B, max_seq, dtype, kv_quant=perf.kv_quant)
+    x = params["embed"][tokens]
+    if cfg.n_prefix_embeds and "prefix_embeds" in batch:
+        pe = batch["prefix_embeds"].astype(x.dtype)
+        x = jnp.concatenate([pe, x[:, cfg.n_prefix_embeds:]], axis=1)
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x = shd.btd(x)
+    chunk = perf.attn_chunk
+
+    if cfg.family == "dense":
+        def body(lp, x, cache):
+            h, cache = attn_mod.prefill_into_cache(
+                lp["attn"], _norm(x, lp["ln1"], cfg), positions, cfg, shd,
+                cache, chunk=chunk)
+            x = x + h
+            x = x + swiglu(lp["mlp"], _norm(x, lp["ln2"], cfg), shd)
+            return x, cache
+        x, caches["layers"] = _scan_layers_with_cache(
+            body, x, params["layers"], caches["layers"])
+    elif cfg.family == "moe":
+        def body_d(lp, x, cache):
+            h, cache = mla_mod.mla_prefill(
+                lp["attn"], _norm(x, lp["ln1"], cfg), positions, cfg, shd,
+                cache, chunk=chunk)
+            x = x + h
+            x = x + swiglu(lp["mlp"], _norm(x, lp["ln2"], cfg), shd)
+            return x, cache
+        x, caches["dense_layers"] = _scan_layers_with_cache(
+            body_d, x, params["dense_layers"], caches["dense_layers"])
+
+        def body_m(lp, x, cache):
+            h, cache = mla_mod.mla_prefill(
+                lp["attn"], _norm(x, lp["ln1"], cfg), positions, cfg, shd,
+                cache, chunk=chunk)
+            x = x + h
+            y, _ = moe_mod.moe_ffn(lp["moe"], _norm(x, lp["ln2"], cfg),
+                                   cfg, shd, groups=perf.moe_groups)
+            return x + y, cache
+        x, caches["layers"] = _scan_layers_with_cache(
+            body_m, x, params["layers"], caches["layers"])
+    elif cfg.family == "ssm":
+        def body(lp, x, st):
+            return _ssm_prefill_block(lp, x, cfg, shd)
+        x, caches["layers"] = _scan_layers_with_cache(
+            body, x, params["layers"], caches["layers"])
+    elif cfg.family == "hybrid":
+        x, caches = _hybrid_prefill(params, x, positions, caches, cfg, shd,
+                                    perf)
+    elif cfg.family == "encdec":
+        enc_out = encode(params, batch["audio_embeds"], cfg, shd, perf)
+        dh = cfg.head_dim
+        F = enc_out.shape[1]
+        enc_pos = jnp.broadcast_to(jnp.arange(F)[None], (B, F))
+
+        def body(lp, x, cache_i):
+            cache, _, _ = cache_i
+            h, cache = attn_mod.prefill_into_cache(
+                lp["self_attn"], _norm(x, lp["ln1"], cfg), positions, cfg,
+                shd, cache, chunk=chunk)
+            x = x + h
+            xq = _norm(x, lp["ln2"], cfg)
+            x = x + _cross_attn(lp["cross_attn"], xq, enc_out, positions,
+                                enc_pos, cfg, shd)
+            x = x + gelu_mlp(lp["mlp"], _norm(x, lp["ln3"], cfg), shd)
+            ck = (enc_out @ lp["cross_attn"]["wk"]).reshape(
+                B, F, cfg.n_kv_heads, dh)
+            cv = (enc_out @ lp["cross_attn"]["wv"]).reshape(
+                B, F, cfg.n_kv_heads, dh)
+            return x, (cache, ck, cv)
+        x, (caches["layers"], caches["cross_k"], caches["cross_v"]) = \
+            _scan_layers_with_cache(
+                body, x, params["layers"],
+                (caches["layers"], caches["cross_k"], caches["cross_v"]))
+    else:
+        raise ValueError(cfg.family)
+
+    x = _norm(x[:, -1:], params["final_norm"], cfg)
+    logits = shd.bv((x @ params["lm_head"])[:, 0])
+    return logits, caches
+
+
+def _ssm_prefill_block(lp, x, cfg, shd):
+    """Run the ssm block over the prompt and capture (conv window, state)."""
+    s = cfg.ssm
+    xn = _norm(x, lp["ln"], cfg)
+    y = ssm_mod.ssm_train(lp["ssm"], xn, cfg, shd)
+    # final conv window: last (d_conv - 1) pre-conv activations
+    x1 = xn @ lp["ssm"]["in_proj_x"]
+    conv = x1[:, -(s.d_conv - 1):]
+    h = _final_state(lp["ssm"], xn, cfg)
+    return x + y, {"conv": conv.astype(x.dtype), "h": h}
+
+
+def _final_state(pp, xn, cfg):
+    """Recompute the SSM final state for the prompt (prefill bookkeeping)."""
+    s = cfg.ssm
+    din = ssm_mod.d_inner(cfg)
+    N = s.d_state
+    if s.version == 1:
+        x1 = jax.nn.silu(ssm_mod._causal_conv(xn @ pp["in_proj_x"],
+                                              pp["conv_w"], pp["conv_b"]))
+        r = ssm_mod._dt_rank(cfg)
+        dbc = x1 @ pp["x_proj"]
+        dt = jax.nn.softplus(dbc[..., :r] @ pp["dt_proj"] + pp["dt_bias"])
+        Bm, Cm = dbc[..., r:r + N], dbc[..., r + N:r + 2 * N]
+        A = jnp.exp(pp["A_log"])
+    else:
+        z, x1, Bm, Cm, dt_h = ssm_mod._split_m2(pp, xn, cfg)
+        x1 = jax.nn.silu(ssm_mod._causal_conv(x1, pp["conv_w"], pp["conv_b"]))
+        dt = jnp.repeat(jax.nn.softplus(dt_h + pp["dt_bias"]), s.headdim, -1)
+        A = jnp.broadcast_to(
+            jnp.repeat(jnp.exp(pp["A_log"]), s.headdim)[:, None], (din, N))
+    h0 = jnp.zeros((xn.shape[0], din, N), jnp.float32)
+    _, h = ssm_mod._scan_chunks(h0, x1, dt, Bm, Cm, A, s.chunk)
+    return h
+
+
+def _hybrid_prefill(params, x, positions, caches, cfg, shd, perf):
+    L, per = cfg.n_layers, cfg.attn_every
+    n_seg = max(L // per, 1)
+    shared = caches["shared"]
+    states = caches["layers"]
+    for seg in range(n_seg):
+        sp = params["shared_block"]
+        cache = jax.tree_util.tree_map(lambda a: a[seg], shared)
+        h, cache = attn_mod.prefill_into_cache(
+            sp["attn"], _norm(x, sp["ln1"], cfg), positions, cfg, shd,
+            cache, chunk=perf.attn_chunk)
+        x = x + h
+        x = x + swiglu(sp["mlp"], _norm(x, sp["ln2"], cfg), shd)
+        shared = jax.tree_util.tree_map(
+            lambda a, u: a.at[seg].set(u.astype(a.dtype)), shared, cache)
+        for i in range(seg * per, (seg + 1) * per):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            x, st = _ssm_prefill_block(lp, x, cfg, shd)
+            states = jax.tree_util.tree_map(
+                lambda a, u: a.at[i].set(u.astype(a.dtype)), states, st)
+    for i in range(n_seg * per, L):
+        lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+        x, st = _ssm_prefill_block(lp, x, cfg, shd)
+        states = jax.tree_util.tree_map(
+            lambda a, u: a.at[i].set(u.astype(a.dtype)), states, st)
+    caches["shared"] = shared
+    caches["layers"] = states
+    return x, caches
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+
+def decode_step(params: dict, tokens: jax.Array, caches: dict, pos,
+                cfg: ArchConfig, shd: Sharder = NOSHARD,
+                unroll: bool = False, moe_groups: int = 1
+                ) -> tuple[jax.Array, dict]:
+    """tokens [B, 1] int32; pos scalar int32. Returns (logits [B, Vp], caches')."""
+    B = tokens.shape[0]
+    x = shd.btd(params["embed"][tokens])
+
+    if cfg.family == "dense":
+        def body(lp, x, cache):
+            h, cache = attn_mod.attn_decode(
+                lp["attn"], _norm(x, lp["ln1"], cfg), cache, pos, cfg, shd)
+            x = x + h
+            x = x + swiglu(lp["mlp"], _norm(x, lp["ln2"], cfg), shd)
+            return x, cache
+        x, caches["layers"] = _scan_layers_with_cache(
+            body, x, params["layers"], caches["layers"], unroll)
+    elif cfg.family == "moe":
+        def body_d(lp, x, cache):
+            h, cache = mla_mod.mla_decode(
+                lp["attn"], _norm(x, lp["ln1"], cfg), cache, pos, cfg, shd)
+            x = x + h
+            x = x + swiglu(lp["mlp"], _norm(x, lp["ln2"], cfg), shd)
+            return x, cache
+        x, caches["dense_layers"] = _scan_layers_with_cache(
+            body_d, x, params["dense_layers"], caches["dense_layers"],
+            unroll)
+
+        def body_m(lp, x, cache):
+            h, cache = mla_mod.mla_decode(
+                lp["attn"], _norm(x, lp["ln1"], cfg), cache, pos, cfg, shd)
+            x = x + h
+            y, _ = moe_mod.moe_ffn(lp["moe"], _norm(x, lp["ln2"], cfg),
+                                   cfg, shd, groups=moe_groups)
+            return x + y, cache
+        x, caches["layers"] = _scan_layers_with_cache(
+            body_m, x, params["layers"], caches["layers"], unroll)
+    elif cfg.family == "ssm":
+        def body(lp, x, st):
+            h, st = ssm_mod.ssm_decode(lp["ssm"], _norm(x, lp["ln"], cfg),
+                                       st, cfg, shd)
+            return x + h, st
+        x, caches["layers"] = _scan_layers_with_cache(
+            body, x, params["layers"], caches["layers"], unroll)
+    elif cfg.family == "hybrid":
+        L, per = cfg.n_layers, cfg.attn_every
+        n_seg = max(L // per, 1)
+        shared = caches["shared"]
+        states = caches["layers"]
+        for seg in range(n_seg):
+            sp = params["shared_block"]
+            cache = jax.tree_util.tree_map(lambda a: a[seg], shared)
+            h, cache = attn_mod.attn_decode(
+                sp["attn"], _norm(x, sp["ln1"], cfg), cache, pos, cfg, shd)
+            x = x + h
+            x = x + swiglu(sp["mlp"], _norm(x, sp["ln2"], cfg), shd)
+            shared = jax.tree_util.tree_map(
+                lambda a, u: a.at[seg].set(u.astype(a.dtype)), shared, cache)
+            for i in range(seg * per, (seg + 1) * per):
+                lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+                st = jax.tree_util.tree_map(lambda a: a[i], states)
+                h, st = ssm_mod.ssm_decode(lp["ssm"], _norm(x, lp["ln"], cfg),
+                                           st, cfg, shd)
+                x = x + h
+                states = jax.tree_util.tree_map(
+                    lambda a, u: a.at[i].set(u.astype(a.dtype)), states, st)
+        for i in range(n_seg * per, L):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params["layers"])
+            st = jax.tree_util.tree_map(lambda a: a[i], states)
+            h, st = ssm_mod.ssm_decode(lp["ssm"], _norm(x, lp["ln"], cfg),
+                                       st, cfg, shd)
+            x = x + h
+            states = jax.tree_util.tree_map(
+                lambda a, u: a.at[i].set(u.astype(a.dtype)), states, st)
+        caches["shared"] = shared
+        caches["layers"] = states
+    elif cfg.family == "encdec":
+        dh = cfg.head_dim
+        hkv = cfg.n_kv_heads
+        rep = cfg.n_heads // hkv
+
+        def body(lp, x, cache_i):
+            cache, ck, cv = cache_i
+            h, cache = attn_mod.attn_decode(
+                lp["self_attn"], _norm(x, lp["ln1"], cfg), cache, pos, cfg,
+                shd)
+            x = x + h
+            xq = _norm(x, lp["ln2"], cfg)
+            q = (xq @ lp["cross_attn"]["wq"]).reshape(B, 1, cfg.n_heads, dh)
+            qf = q.astype(jnp.float32).reshape(B, hkv, rep, dh)
+            s = jnp.einsum("bhrd,bkhd->bhrk", qf,
+                           ck.astype(jnp.float32)) * dh ** -0.5
+            p = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhrk,bkhd->bhrd", p, cv.astype(jnp.float32))
+            o = o.reshape(B, 1, cfg.n_heads * dh).astype(x.dtype) \
+                @ lp["cross_attn"]["wo"]
+            x = x + shd.btd(o)
+            x = x + gelu_mlp(lp["mlp"], _norm(x, lp["ln3"], cfg), shd)
+            return x, (cache, ck, cv)
+        x, (caches["layers"], caches["cross_k"], caches["cross_v"]) = \
+            _scan_layers_with_cache(
+                body, x, params["layers"],
+                (caches["layers"], caches["cross_k"], caches["cross_v"]),
+                unroll)
+    else:
+        raise ValueError(cfg.family)
+
+    x = _norm(x, params["final_norm"], cfg)
+    logits = shd.bv((x @ params["lm_head"])[:, 0])
+    return logits, caches

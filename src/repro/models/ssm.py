@@ -1,0 +1,240 @@
+"""Selective state-space layers: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Training uses a **chunked selective scan**: jax.lax.scan over sequence chunks
+carrying the [B, d_inner, N] state; inside each chunk an associative scan
+materializes only [B, chunk, d_inner, N] — peak activation memory is
+O(L/chunk) smaller than the naive full-sequence associative scan, which is
+what makes the 4k-train and 500k-decode cells fit.
+
+Mamba-2 is run through the same per-channel scan by broadcasting its
+per-head scalar decay to the head's channels (SSD's state update is the
+diagonal special case — mathematically identical, the per-head structure is
+only a parameterization).  Simplification vs the reference implementation:
+the short causal conv is applied to x only (not B/C); noted in DESIGN.md.
+
+Decode carries {conv window, ssm state} — O(1) per token, which is why the
+SSM/hybrid archs run the long_500k cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import NOSHARD, Sharder, dense_init, rmsnorm, \
+    rmsnorm_init
+
+
+def _dt_rank(cfg: ArchConfig) -> int:
+    return cfg.ssm.dt_rank or -(-cfg.d_model // 16)
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def ssm_init(key, cfg: ArchConfig, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = d_inner(cfg)
+    N = s.d_state
+    keys = jax.random.split(key, 8)
+    if s.version == 1:
+        r = _dt_rank(cfg)
+        kx, kz = jax.random.split(keys[0])
+        p = {
+            # split x/z projections so the TP shard axis is clean (no
+            # cross-shard slicing of a fused in_proj output)
+            "in_proj_x": dense_init(kx, d, din, dtype),
+            "in_proj_z": dense_init(kz, d, din, dtype),
+            "conv_w": (jax.random.normal(keys[1], (s.d_conv, din), jnp.float32)
+                       * (s.d_conv * din) ** -0.5).astype(dtype),
+            "conv_b": jnp.zeros((din,), dtype),
+            "x_proj": dense_init(keys[2], din, r + 2 * N, dtype),
+            "dt_proj": dense_init(keys[3], r, din, dtype),
+            "dt_bias": jnp.full((din,), -4.6, jnp.float32),  # softplus ~ 0.01
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, N + 1, dtype=jnp.float32), (din, N))).copy(),
+            "D": jnp.ones((din,), jnp.float32),
+            "out_proj": dense_init(keys[4], din, d, dtype,
+                                   scale=din ** -0.5),
+        }
+    else:  # mamba2 / SSD
+        H = din // s.headdim
+        kx, kz, kbc, kdt = jax.random.split(keys[0], 4)
+        p = {
+            "in_proj_x": dense_init(kx, d, din, dtype),
+            "in_proj_z": dense_init(kz, d, din, dtype),
+            "in_proj_bc": dense_init(kbc, d, 2 * N, dtype),
+            "in_proj_dt": dense_init(kdt, d, H, dtype),
+            "conv_w": (jax.random.normal(keys[1], (s.d_conv, din), jnp.float32)
+                       * (s.d_conv * din) ** -0.5).astype(dtype),
+            "conv_b": jnp.zeros((din,), dtype),
+            "dt_bias": jnp.full((H,), -4.6, jnp.float32),
+            "A_log": jnp.zeros((H,), jnp.float32),
+            "D": jnp.ones((H,), jnp.float32),
+            "norm_w": rmsnorm_init(din, dtype),
+            "out_proj": dense_init(keys[4], din, d, dtype,
+                                   scale=din ** -0.5),
+        }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x [B, L, D], w [K, D] -> [B, L, D]."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    L = x.shape[1]
+    y = sum(pad[:, k:k + L] * w[k] for k in range(K))
+    return y + b
+
+
+def _scan_chunks(h0, x1, dt, Bm, Cm, A, chunk: int):
+    """Chunked selective scan.
+
+    h0 [B, D, N]; x1/dt [B, L, D]; Bm/Cm [B, L, N]; A [D, N] (positive decay
+    rates).  Returns (y [B, L, D], h_last).
+    """
+    Bsz, L, D = x1.shape
+    N = Bm.shape[-1]
+    nc = max(L // chunk, 1)
+    ck = L // nc
+    xs = (
+        jnp.moveaxis(x1.reshape(Bsz, nc, ck, D), 1, 0),
+        jnp.moveaxis(dt.reshape(Bsz, nc, ck, D), 1, 0),
+        jnp.moveaxis(Bm.reshape(Bsz, nc, ck, N), 1, 0),
+        jnp.moveaxis(Cm.reshape(Bsz, nc, ck, N), 1, 0),
+    )
+
+    def body(h, xs_c):
+        xc, dtc, Bc, Cc = (v.astype(jnp.float32) for v in xs_c)
+        decay = jnp.exp(-dtc[..., None] * A)              # [B, ck, D, N]
+        inp = (dtc * xc)[..., None] * Bc[:, :, None, :]   # [B, ck, D, N]
+
+        def comb(a, b):
+            da, ia = a
+            db, ib = b
+            return da * db, ib + db * ia
+
+        dcum, icum = jax.lax.associative_scan(comb, (decay, inp), axis=1)
+        states = dcum * h[:, None] + icum                 # [B, ck, D, N]
+        y = (states * Cc[:, :, None, :]).sum(-1)          # [B, ck, D]
+        return states[:, -1], y
+
+    h_last, ys = jax.lax.scan(body, h0.astype(jnp.float32), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, L, D)
+    return y, h_last
+
+
+def _split_m2(params, x, cfg: ArchConfig):
+    N = cfg.ssm.d_state
+    z = x @ params["in_proj_z"]
+    x1 = x @ params["in_proj_x"]
+    bc = x @ params["in_proj_bc"]
+    Bm, Cm = bc[..., :N], bc[..., N:]
+    dt_h = x @ params["in_proj_dt"]
+    return z, x1, Bm, Cm, dt_h
+
+
+def ssm_train(params: dict, x: jax.Array, cfg: ArchConfig,
+              shd: Sharder = NOSHARD) -> jax.Array:
+    """Full-sequence forward: x [B, L, d] -> [B, L, d]."""
+    s = cfg.ssm
+    din = d_inner(cfg)
+    N = s.d_state
+    if s.version == 1:
+        x1 = x @ params["in_proj_x"]
+        z = x @ params["in_proj_z"]
+        x1 = jax.nn.silu(_causal_conv(x1, params["conv_w"], params["conv_b"]))
+        x1 = shd.btf(x1)
+        r = _dt_rank(cfg)
+        dbc = x1 @ params["x_proj"]
+        dt = jax.nn.softplus(
+            dbc[..., :r] @ params["dt_proj"] + params["dt_bias"])
+        Bm, Cm = dbc[..., r:r + N], dbc[..., r + N:]
+        A = jnp.exp(params["A_log"])
+        D = params["D"]
+    else:
+        z, x1, Bm, Cm, dt_h = _split_m2(params, x, cfg)
+        x1 = jax.nn.silu(_causal_conv(x1, params["conv_w"], params["conv_b"]))
+        x1 = shd.btf(x1)
+        dt_h = jax.nn.softplus(dt_h + params["dt_bias"])          # [B, L, H]
+        dt = jnp.repeat(dt_h, s.headdim, axis=-1)                 # [B, L, D]
+        A = jnp.broadcast_to(
+            jnp.repeat(jnp.exp(params["A_log"]), s.headdim)[:, None], (din, N))
+        D = jnp.repeat(params["D"], s.headdim)
+
+    h0 = jnp.zeros((x.shape[0], din, N), jnp.float32)
+    y, _ = _scan_chunks(h0, x1, dt, Bm, Cm, A, s.chunk)
+    y = y + D * x1.astype(jnp.float32)
+    if s.version == 1:
+        y = y * jax.nn.silu(z.astype(jnp.float32))
+        y = y.astype(x.dtype)
+    else:
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        y = rmsnorm(y, params["norm_w"], cfg.norm_eps)
+    return shd.btd(y @ params["out_proj"])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    din = d_inner(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, din), dtype),
+        "h": jnp.zeros((batch, din, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(params: dict, x: jax.Array, state: dict, cfg: ArchConfig,
+               shd: Sharder = NOSHARD) -> tuple[jax.Array, dict]:
+    """One token: x [B, 1, d] -> ([B, 1, d], state')."""
+    s = cfg.ssm
+    din = d_inner(cfg)
+    N = s.d_state
+    if s.version == 1:
+        x1 = x @ params["in_proj_x"]
+        z = x @ params["in_proj_z"]
+    else:
+        z, x1, Bm, Cm, dt_h = _split_m2(params, x, cfg)
+
+    # conv window update
+    window = jnp.concatenate([state["conv"], x1.astype(state["conv"].dtype)],
+                             axis=1)                       # [B, K, din]
+    xc = (window * params["conv_w"]).sum(axis=1, keepdims=True) \
+        + params["conv_b"]
+    xc = jax.nn.silu(xc)
+    new_conv = window[:, 1:]
+
+    if s.version == 1:
+        r = _dt_rank(cfg)
+        dbc = xc @ params["x_proj"]
+        dt = jax.nn.softplus(
+            dbc[..., :r] @ params["dt_proj"] + params["dt_bias"])
+        Bm, Cm = dbc[..., r:r + N], dbc[..., r + N:]
+        A = jnp.exp(params["A_log"])
+        D = params["D"]
+    else:
+        dt_h = jax.nn.softplus(dt_h + params["dt_bias"])
+        dt = jnp.repeat(dt_h, s.headdim, axis=-1)
+        A = jnp.broadcast_to(
+            jnp.repeat(jnp.exp(params["A_log"]), s.headdim)[:, None], (din, N))
+        D = jnp.repeat(params["D"], s.headdim)
+
+    dtf = dt[:, 0].astype(jnp.float32)                     # [B, din]
+    xf = xc[:, 0].astype(jnp.float32)
+    decay = jnp.exp(-dtf[..., None] * A)                   # [B, din, N]
+    inp = (dtf * xf)[..., None] * Bm[:, 0, None, :].astype(jnp.float32)
+    h = shd.ssm_state(decay * state["h"] + inp)
+    y = (h * Cm[:, 0, None, :].astype(jnp.float32)).sum(-1)  # [B, din]
+    y = y + D * xf
+    y = (y[:, None] * jax.nn.silu(z.astype(jnp.float32)))
+    if s.version == 2:
+        y = rmsnorm(y.astype(x.dtype), params["norm_w"], cfg.norm_eps)
+    else:
+        y = y.astype(x.dtype)
+    out = shd.btd(y @ params["out_proj"])
+    return out, {"conv": new_conv, "h": h}

@@ -1,0 +1,2 @@
+from repro.parallel.sharding import (cache_specs, make_sharder,  # noqa: F401
+                                     param_specs)

@@ -1,0 +1,126 @@
+"""Parameter / cache PartitionSpec rules (DP+FSDP over 'data', TP/EP/SP over
+'model', 'pod' extending the data axis multi-pod).
+
+The scheme is Megatron-style 2D:
+
+  column-parallel in-projections  [d, out]   -> P(data, model)
+  row-parallel out-projections    [out, d]   -> P(model, data)
+  experts                         [E, d, f]  -> P(model, data, None)  (EP)
+  embeddings                      [V, d]     -> P(model, data)
+  norms / scalars                            -> replicated
+
+FSDP: the 'data' entry on the *other* matrix axis shards params and
+optimizer state ZeRO-3 style; XLA all-gathers them per-layer inside the
+scan (which pipelines with compute).  KV caches shard batch over 'data' and
+SEQUENCE over 'model' (flash-decoding layout; see attention.py).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import Sharder
+
+STACK_KEYS = ("layers", "enc_layers", "dense_layers")
+
+
+def make_sharder(mesh, multi_pod: bool = False) -> Sharder:
+    data_axes = ("pod", "data") if multi_pod else "data"
+    return Sharder(mesh=mesh, data_axes=data_axes, model_axes="model")
+
+
+def _rule(path_keys: list[str], ndim: int, data) -> P:
+    """PartitionSpec for one param, BEFORE the stacked-layer prefix."""
+    name = path_keys[-1]
+    in_experts = "experts" in path_keys
+
+    if in_experts:                       # [E, d, f] / [E, f, d]
+        if name in ("w_gate", "w_up"):
+            return P("model", data, None)
+        if name == "w_down":
+            return P("model", None, data)
+    col = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj_x", "in_proj_z",
+           "wq_b", "wkv_b", "dt_proj"}
+    row = {"wo", "w_down", "out_proj"}
+    if name == "embed":
+        return P("model", data)
+    if name == "lm_head":
+        return P(data, "model")
+    if name in col:
+        return P(data, "model") if ndim == 2 else P("model")
+    if name in row:
+        return P("model", data)
+    if name in ("bq", "bk", "bv", "b_up", "conv_b", "norm_w"):
+        return P("model")
+    if name == "conv_w":                 # [K, din]
+        return P(None, "model")
+    if name in ("x_proj", "A_log"):      # [din, *]
+        return P("model", None)
+    if name == "D" and ndim == 1:
+        return P("model")
+    if name == "dt_bias":
+        return P("model")
+    if name in ("router", "wq_a", "wkv_a", "in_proj_bc", "in_proj_dt"):
+        return P(data, None)
+    # norms, small vectors, scalars -> replicated
+    return P(*([None] * ndim))
+
+
+def param_specs(cfg: ArchConfig, params_shape: Any, multi_pod: bool = False
+                ) -> Any:
+    """PartitionSpec pytree matching a params pytree (arrays or SDS)."""
+    data = ("pod", "data") if multi_pod else "data"
+
+    def one(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        stacked = any(k in STACK_KEYS for k in keys)
+        ndim = len(leaf.shape)
+        base_ndim = ndim - 1 if stacked else ndim
+        spec = _rule(keys, base_ndim, data)
+        # mamba2 dt_bias/A_log/D are [H] per-head (small): replicate
+        if keys[-1] in ("dt_bias", "A_log", "D") and cfg.ssm is not None \
+                and cfg.ssm.version == 2:
+            spec = P(*([None] * base_ndim))
+        if stacked:
+            spec = P(None, *spec)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def cache_specs(cfg: ArchConfig, cache_shape: Any, multi_pod: bool = False
+                ) -> Any:
+    """PartitionSpecs for serve caches (stacked layer axis leading)."""
+    data = ("pod", "data") if multi_pod else "data"
+
+    def one(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        name = keys[-1]
+        ndim = len(leaf.shape)
+        if name in ("k", "v", "k_q", "v_q"):   # [L, B, W, hkv, dh]
+            return P(None, data, "model", None, None)
+        if name in ("k_s", "v_s"):       # [L, B, W, hkv] quant scales
+            return P(None, data, "model", None)
+        if name in ("cross_k", "cross_v"):  # [L, B, F, hkv, dh]
+            return P(None, data, None, "model", None)
+        if name in ("c_kv", "k_rope"):   # [L, B, S, lora]
+            return P(None, data, "model", None)
+        if name == "conv":               # [L, B, K-1, din]
+            return P(None, data, None, "model")
+        if name == "h":                  # [L, B, din, N]
+            return P(None, data, "model", None)
+        if name in ("slot_pos", "len", "step"):
+            return P(*([None] * ndim))
+        return P(*([None] * ndim))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def to_named(mesh, spec_tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,1 @@
+from repro.runtime.trainer import TrainerConfig, train_loop  # noqa: F401

@@ -1,0 +1,2 @@
+"""The paper's three benchmark workloads (§3.1), implemented word-parallel
+bit-serial on the AP: Black-Scholes (BS), FFT, Dense Matrix Multiply (DMM)."""

@@ -1,0 +1,229 @@
+"""Unit tests for the AP engine + ISA: correctness vs numpy and the paper's
+cycle-count claims (8m add, O(m^2) multiply)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bitplane as bp
+from repro.core import isa, arith
+from repro.core.engine import APEngine
+
+N = 256  # words per test engine (multiple of 32)
+
+
+def make_engine(n_bits=128, n=N):
+    return APEngine(n_words=n, n_bits=n_bits)
+
+
+def rand(n, m, seed):
+    return np.random.default_rng(seed).integers(0, 1 << m, size=n, dtype=np.uint64)
+
+
+# ----------------------------------------------------------------- bitplane
+def test_pack_unpack_roundtrip():
+    v = rand(N, 17, 0)
+    planes = bp.pack_words(v, 17)
+    assert planes.shape == (17, N // 32)
+    out = np.asarray(bp.unpack_words(planes))
+    np.testing.assert_array_equal(out, v)
+
+
+def test_pack_bits_roundtrip():
+    rng = np.random.default_rng(1)
+    b = rng.integers(0, 2, size=N).astype(bool)
+    row = bp.pack_bits(b)
+    np.testing.assert_array_equal(np.asarray(bp.unpack_bits(row)), b)
+
+
+def test_compare_matches_numpy():
+    eng = make_engine()
+    f = eng.alloc.alloc(8)
+    v = rand(N, 8, 2)
+    eng.load(f, v)
+    # compare bits 1,3,5 against key (1,0,1)
+    cols, key = [f.col(1), f.col(3), f.col(5)], [1, 0, 1]
+    eng.compare(cols, key)
+    got = np.asarray(bp.unpack_bits(eng.tag))
+    want = (((v >> 1) & 1) == 1) & (((v >> 3) & 1) == 0) & (((v >> 5) & 1) == 1)
+    np.testing.assert_array_equal(got, want)
+    assert eng.compare_cycles == 1 and eng.cycles == 1
+
+
+def test_tagged_write_only_hits_tagged_rows():
+    eng = make_engine()
+    f = eng.alloc.alloc(4)
+    v = rand(N, 4, 3)
+    eng.load(f, v)
+    eng.compare([f.col(0)], [1])               # tag rows with LSB set
+    eng.write([f.col(1), f.col(2)], [1, 0])
+    got = eng.peek(f)
+    want = v.copy()
+    sel = (v & 1) == 1
+    want[sel] = (want[sel] & ~np.uint64(0b0110)) | np.uint64(0b0010)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------- add
+@pytest.mark.parametrize("m", [4, 8, 32])
+def test_add_correct_and_8m_cycles(m):
+    eng = make_engine()
+    a, b, c = eng.alloc.alloc(m), eng.alloc.alloc(m), eng.alloc.alloc(1)
+    va, vb = rand(N, m, 4), rand(N, m, 5)
+    eng.load(a, va)
+    eng.load(b, vb)
+    eng.clear(c)
+    base = eng.cycles
+    eng.run(isa.add(a, b, c))
+    assert eng.cycles - base == 8 * m, "paper claims exactly 8m cycles"
+    full = va + vb
+    np.testing.assert_array_equal(eng.peek(b), full & ((1 << m) - 1))
+    np.testing.assert_array_equal(eng.peek(c), (full >> m) & 1)
+
+
+@pytest.mark.parametrize("m", [4, 16])
+def test_sub_correct(m):
+    eng = make_engine()
+    a, b, br = eng.alloc.alloc(m), eng.alloc.alloc(m), eng.alloc.alloc(1)
+    va, vb = rand(N, m, 6), rand(N, m, 7)
+    eng.load(a, va)
+    eng.load(b, vb)
+    isa.run_sub(eng, a, b, br)
+    np.testing.assert_array_equal(eng.peek(b), (vb - va) & ((1 << m) - 1))
+    np.testing.assert_array_equal(eng.peek(br), (vb < va).astype(np.uint64))
+
+
+def test_const_add():
+    m, k = 12, 1234
+    eng = make_engine()
+    b, c = eng.alloc.alloc(m), eng.alloc.alloc(1)
+    vb = rand(N, m, 8)
+    eng.load(b, vb)
+    eng.clear(c)
+    base = eng.cycles
+    eng.run(isa.const_add(b, k, c))
+    assert eng.cycles - base == 4 * m
+    np.testing.assert_array_equal(eng.peek(b), (vb + k) & ((1 << m) - 1))
+
+
+def test_copy_and_cond_copy():
+    m = 9
+    eng = make_engine()
+    src, dst, cond = eng.alloc.alloc(m), eng.alloc.alloc(m), eng.alloc.alloc(1)
+    vs, vd = rand(N, m, 9), rand(N, m, 10)
+    cnd = rand(N, 1, 11)
+    eng.load(src, vs)
+    eng.load(dst, vd)
+    eng.load(cond, cnd)
+    eng.run(isa.cond_copy(dst, src, cond))
+    want = np.where(cnd == 1, vs, vd)
+    np.testing.assert_array_equal(eng.peek(dst), want)
+    eng.run(isa.copy(dst, src))
+    np.testing.assert_array_equal(eng.peek(dst), vs)
+
+
+def test_eq_gt_flags():
+    m = 8
+    eng = make_engine()
+    a, b = eng.alloc.alloc(m), eng.alloc.alloc(m)
+    fl, gt, dec = eng.alloc.alloc(1), eng.alloc.alloc(1), eng.alloc.alloc(1)
+    va, vb = rand(N, m, 12), rand(N, m, 13)
+    va[:16] = vb[:16]  # force some equalities
+    eng.load(a, va)
+    eng.load(b, vb)
+    eng.set_bits(fl, 1)
+    eng.run(isa.eq_flag(a, b, fl))
+    np.testing.assert_array_equal(eng.peek(fl), (va == vb).astype(np.uint64))
+    eng.clear(gt)
+    eng.clear(dec)
+    eng.run(isa.gt_flag(a, b, gt, dec))
+    np.testing.assert_array_equal(eng.peek(gt), (va > vb).astype(np.uint64))
+
+
+def test_lut():
+    eng = make_engine()
+    arg, out = eng.alloc.alloc(6), eng.alloc.alloc(12)
+    v = rand(N, 6, 14)
+    eng.load(arg, v)
+    eng.clear(out)
+    fn = lambda x: (x * x + 3) & 0xFFF
+    eng.run(isa.lut(arg, out, fn))
+    np.testing.assert_array_equal(eng.peek(out),
+                                  np.array([fn(int(x)) for x in v], np.uint64))
+
+
+# ---------------------------------------------------------------- mul / div
+@pytest.mark.parametrize("m", [4, 8, 16])
+def test_mul_correct_and_quadratic_cycles(m):
+    eng = make_engine(n_bits=6 * m + 8)
+    a, b = eng.alloc.alloc(m), eng.alloc.alloc(m)
+    p, c = eng.alloc.alloc(2 * m + 1), eng.alloc.alloc(1)
+    va, vb = rand(N, m, 15), rand(N, m, 16)
+    eng.load(a, va)
+    eng.load(b, vb)
+    base = eng.cycles
+    arith.run_mul(eng, a, b, p, c)
+    took = eng.cycles - base
+    assert took <= 10 * m * (m + 2), f"multiply should be O(m^2), took {took}"
+    assert took >= 8 * m * m
+    np.testing.assert_array_equal(eng.peek(p), va * vb)
+
+
+def test_mac_accumulates():
+    m = 6
+    eng = make_engine()
+    a, b = eng.alloc.alloc(m), eng.alloc.alloc(m)
+    acc, c = eng.alloc.alloc(2 * m + 4), eng.alloc.alloc(1)
+    eng.clear(acc)
+    total = np.zeros(N, np.uint64)
+    for seed in (20, 21, 22):
+        va, vb = rand(N, m, seed), rand(N, m, seed + 100)
+        eng.load(a, va)
+        eng.load(b, vb)
+        arith.run_mac(eng, a, b, acc, c)
+        total += va * vb
+    np.testing.assert_array_equal(eng.peek(acc), total)
+
+
+@pytest.mark.parametrize("m", [4, 8])
+def test_div_correct(m):
+    eng = make_engine(n_bits=8 * m + 16)
+    a, b = eng.alloc.alloc(m), eng.alloc.alloc(m)
+    q = eng.alloc.alloc(m)
+    wide = eng.alloc.alloc(2 * m + 1)
+    trial = eng.alloc.alloc(m + 1)
+    br, qb = eng.alloc.alloc(1), eng.alloc.alloc(1)
+    va = rand(N, m, 23)
+    vb = np.maximum(rand(N, m, 24), 1)  # avoid div by zero
+    eng.load(a, va)
+    eng.load(b, vb)
+    arith.run_div(eng, a, b, q, wide, trial, br, qb)
+    np.testing.assert_array_equal(eng.peek(q), va // vb)
+    np.testing.assert_array_equal(eng.peek(wide)[:] & ((1 << m) - 1)
+                                  if False else eng.peek(wide.slice(0, m)),
+                                  va % vb)
+
+
+# ------------------------------------------------------------ property tests
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 2**32 - 1))
+def test_add_property(m, seed):
+    eng = APEngine(n_words=64, n_bits=3 * m + 2)
+    a, b, c = eng.alloc.alloc(m), eng.alloc.alloc(m), eng.alloc.alloc(1)
+    va, vb = rand(64, m, seed), rand(64, m, seed + 1)
+    eng.load(a, va)
+    eng.load(b, vb)
+    isa.run_add(eng, a, b, c)
+    np.testing.assert_array_equal(eng.peek(b), (va + vb) & ((1 << m) - 1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 10), st.integers(0, 2**32 - 1))
+def test_mul_property(m, seed):
+    eng = APEngine(n_words=64, n_bits=4 * m + 4)
+    a, b = eng.alloc.alloc(m), eng.alloc.alloc(m)
+    p, c = eng.alloc.alloc(2 * m + 1), eng.alloc.alloc(1)
+    va, vb = rand(64, m, seed), rand(64, m, seed + 1)
+    eng.load(a, va)
+    eng.load(b, vb)
+    arith.run_mul(eng, a, b, p, c)
+    np.testing.assert_array_equal(eng.peek(p), va * vb)

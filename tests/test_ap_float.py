@@ -1,0 +1,104 @@
+"""FP32 on the AP: correctness vs numpy float32 and the paper's cycle claims
+(~4400-cycle FP32 multiply, length-independent)."""
+import numpy as np
+import pytest
+
+from repro.core import apfloat
+from repro.core.engine import APEngine
+
+
+def build(n=128, n_bits=352):
+    eng = APEngine(n_words=n, n_bits=n_bits)
+    x = apfloat.FpField.alloc(eng)
+    y = apfloat.FpField.alloc(eng)
+    out = apfloat.FpField.alloc(eng)
+    scr = apfloat.FpScratch.alloc(eng)
+    return eng, x, y, out, scr
+
+
+def rand_fp(n, seed, lo=-100.0, hi=100.0):
+    rng = np.random.default_rng(seed)
+    v = rng.uniform(lo, hi, size=n).astype(np.float32)
+    v[v == 0] = 1.0
+    return v
+
+
+def ulp_diff(a, b):
+    ai = a.view(np.int32).astype(np.int64)
+    bi = b.view(np.int32).astype(np.int64)
+    # map negative floats to a monotonic integer line
+    ai = np.where(ai < 0, np.int64(-2**31) - ai, ai)
+    bi = np.where(bi < 0, np.int64(-2**31) - bi, bi)
+    return np.abs(ai - bi)
+
+
+def test_fp_load_read_roundtrip():
+    eng, x, _, _, _ = build()
+    v = rand_fp(128, 0)
+    apfloat.load_fp32(eng, x, v)
+    got = apfloat.read_fp32(eng, x)
+    np.testing.assert_array_equal(got, v)
+
+
+def test_fp_mul_correct_and_cycle_count():
+    eng, x, y, out, scr = build()
+    va, vb = rand_fp(128, 1), rand_fp(128, 2)
+    va[:4] = [0.0, 3.5, 0.0, -1.25]
+    vb[:4] = [2.0, 0.0, 0.0, -8.0]
+    apfloat.load_fp32(eng, x, va)
+    apfloat.load_fp32(eng, y, vb)
+    base = eng.cycles
+    apfloat.fp_mul(eng, x, y, out, scr)
+    took = eng.cycles - base
+    got = apfloat.read_fp32(eng, out)
+    want = va * vb
+    assert ulp_diff(got, want).max() <= 2, (got[:8], want[:8])
+    # paper claims ~4400 for the optimized direct implementation; ours is the
+    # same O(m^2) structure within ~25%
+    assert 4000 <= took <= 5800, took
+
+
+def test_fp_mul_cycles_independent_of_vector_length():
+    counts = []
+    for n in (64, 1024):
+        eng, x, y, out, scr = build(n=n)
+        apfloat.load_fp32(eng, x, rand_fp(n, 3))
+        apfloat.load_fp32(eng, y, rand_fp(n, 4))
+        base = eng.cycles
+        apfloat.fp_mul(eng, x, y, out, scr)
+        counts.append(eng.cycles - base)
+    assert counts[0] == counts[1], "word-parallel: cycles must not depend on N"
+
+
+@pytest.mark.parametrize("case", ["same_sign", "mixed", "cancel", "far"])
+def test_fp_add_correct(case):
+    n = 128
+    eng, x, y, out, scr = build(n=n, n_bits=512)
+    rng = np.random.default_rng(5)
+    if case == "same_sign":
+        va = rng.uniform(0.5, 50, n).astype(np.float32)
+        vb = rng.uniform(0.5, 50, n).astype(np.float32)
+    elif case == "mixed":
+        va = rng.uniform(-50, 50, n).astype(np.float32)
+        vb = rng.uniform(-50, 50, n).astype(np.float32)
+    elif case == "cancel":
+        va = rng.uniform(1, 2, n).astype(np.float32)
+        vb = (-va * rng.choice([1.0, 0.5, 0.9990234375], n)).astype(np.float32)
+    else:  # far: exponent gap > mantissa width
+        va = rng.uniform(1e10, 1e12, n).astype(np.float32)
+        vb = rng.uniform(1e-6, 1e-4, n).astype(np.float32)
+    va[0], vb[0] = 0.0, 7.5
+    va[1], vb[1] = -7.5, 0.0
+    va[2], vb[2] = 0.0, 0.0
+    va[3], vb[3] = 1.5, -1.5
+    apfloat.load_fp32(eng, x, va)
+    apfloat.load_fp32(eng, y, vb)
+    apfloat.fp_add(eng, x, y, out, scr)
+    got = apfloat.read_fp32(eng, out)
+    want = va + vb
+    exact_zero = want == 0
+    assert np.all(got[exact_zero] == 0), (got[exact_zero][:5])
+    nz = ~exact_zero
+    # truncation rounding in add + alignment guard of 1 bit: allow 4 ulp
+    assert ulp_diff(got[nz], want[nz]).max() <= 4, (
+        got[nz][:8], want[nz][:8], ulp_diff(got[nz], want[nz]).max())

@@ -1,0 +1,181 @@
+"""Per-architecture smoke tests (reduced configs, CPU): shapes, finiteness,
+train grad, and prefill+decode == full forward."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, cell_is_runnable, get_config, list_configs
+from repro.models import model as M
+from repro.models import serve as SV
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk_batch(cfg, B, S, seed=0, with_labels=True):
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))}
+    if with_labels:
+        batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)))
+    if cfg.family == "encdec":
+        batch["audio_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.enc_seq, cfg.d_model)).astype(np.float32))
+    if cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_prefix_embeds, cfg.d_model))
+            .astype(np.float32))
+    return batch
+
+
+@pytest.mark.parametrize("name", list_configs())
+def test_train_step_shapes_and_finiteness(name):
+    cfg = get_config(name).reduced()
+    params = M.init_params(cfg, KEY)
+    B, S = 2, 32
+    batch = _mk_batch(cfg, B, S)
+    logits, aux = M.forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    (loss, metrics), grads = jax.value_and_grad(
+        M.loss_fn, has_aux=True)(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves)
+    # embedding must receive gradient
+    gnorm = float(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                      for g in leaves) ** 0.5)
+    assert gnorm > 1e-3
+
+
+@pytest.mark.parametrize("name", list_configs())
+def test_prefill_decode_matches_forward(name):
+    cfg = get_config(name).reduced()
+    if cfg.moe is not None:   # disable capacity dropping for exactness
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+    params = M.init_params(cfg, KEY)
+    B, S, k = 2, 24, 16
+    batch = _mk_batch(cfg, B, S, seed=1, with_labels=False)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :k]
+    logits_all, _ = M.forward(params, batch, cfg)
+    lg, caches = SV.prefill(params, pre, cfg, max_seq=S)
+    errs = [float(jnp.max(jnp.abs(lg - logits_all[:, k - 1])))]
+    for t in range(k, S):
+        lg, caches = SV.decode_step(params, batch["tokens"][:, t:t + 1],
+                                    caches, jnp.int32(t), cfg)
+        errs.append(float(jnp.max(jnp.abs(lg - logits_all[:, t]))))
+    assert max(errs) < 5e-4, errs
+
+
+def test_sliding_window_ring_buffer_drops_old_tokens():
+    """danube (SWA): decode attends only within the window; cache is O(W)."""
+    cfg = get_config("h2o-danube-3-4b").reduced()
+    assert cfg.sliding_window == 64
+    params = M.init_params(cfg, KEY)
+    B, S = 1, 96                     # longer than the window
+    batch = _mk_batch(cfg, B, S, seed=2, with_labels=False)
+    logits_all, _ = M.forward(params, batch, cfg)
+    k = 80
+    pre = {"tokens": batch["tokens"][:, :k]}
+    lg, caches = SV.prefill(params, pre, cfg, max_seq=S)
+    # ring buffer: cache seq length is the window, not the full sequence
+    assert caches["layers"]["k"].shape[2] == cfg.sliding_window
+    err = float(jnp.max(jnp.abs(lg - logits_all[:, k - 1])))
+    assert err < 5e-4, err
+    for t in range(k, S):
+        lg, caches = SV.decode_step(params, batch["tokens"][:, t:t + 1],
+                                    caches, jnp.int32(t), cfg)
+        err = float(jnp.max(jnp.abs(lg - logits_all[:, t])))
+        assert err < 5e-4, (t, err)
+
+
+def test_int8_kv_cache_decode_close_to_exact():
+    """KIVI-style int8 KV: scales factor exactly out of the contractions;
+    only int8 rounding remains (~1% logit error at random init)."""
+    from repro.models.model import PerfConfig
+    cfg = get_config("codeqwen1.5-7b").reduced()
+    params = M.init_params(cfg, KEY)
+    B, S, k = 2, 24, 16
+    batch = _mk_batch(cfg, B, S, seed=3, with_labels=False)
+    logits_all, _ = M.forward(params, batch, cfg)
+    pre = {"tokens": batch["tokens"][:, :k]}
+    lg, caches = SV.prefill(params, pre, cfg, perf=PerfConfig(kv_quant=True),
+                            max_seq=S)
+    assert caches["layers"]["k_q"].dtype == jnp.int8
+    errs = [float(jnp.max(jnp.abs(lg - logits_all[:, k - 1])))]
+    agree = []
+    for t in range(k, S):
+        lg, caches = SV.decode_step(params, batch["tokens"][:, t:t + 1],
+                                    caches, jnp.int32(t), cfg)
+        errs.append(float(jnp.max(jnp.abs(lg - logits_all[:, t]))))
+        agree.append(bool(jnp.all(jnp.argmax(lg, -1)
+                                  == jnp.argmax(logits_all[:, t], -1))))
+    assert max(errs) < 0.15, errs          # int8 rounding envelope
+    assert sum(agree) >= len(agree) - 1    # greedy choice ~unchanged
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    """With a tight capacity factor the layer still runs and stays finite."""
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.25))
+    params = M.init_params(cfg, KEY)
+    batch = _mk_batch(cfg, 2, 32)
+    (loss, _), grads = jax.value_and_grad(
+        M.loss_fn, has_aux=True)(params, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_moe_aux_loss_balances():
+    """Aux loss is ~1.0 * weight for a balanced router at init."""
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    params = M.init_params(cfg, KEY)
+    batch = _mk_batch(cfg, 2, 64)
+    _, aux = M.forward(params, batch, cfg)
+    # balanced: E * sum(f_i * p_i) ~ 1.0 (x weight x n_moe_layers)
+    n_moe = cfg.n_layers - cfg.moe.first_dense
+    expect = cfg.moe.aux_weight * n_moe
+    assert 0.5 * expect < float(aux) < 2.0 * expect
+
+
+def test_long_500k_eligibility_rules():
+    """Assignment skip rules: SSM/hybrid/SWA run long_500k, the rest skip."""
+    run = {n: cell_is_runnable(get_config(n), SHAPES["long_500k"])[0]
+           for n in list_configs()}
+    assert run["falcon-mamba-7b"] and run["zamba2-1.2b"] \
+        and run["h2o-danube-3-4b"]
+    for n in ("whisper-base", "deepseek-v2-236b", "deepseek-v2-lite-16b",
+              "stablelm-1.6b", "phi3-medium-14b", "codeqwen1.5-7b",
+              "qwen2-vl-72b"):
+        assert not run[n], n
+
+
+def test_mrope_equals_rope_for_text():
+    """qwen2-vl M-RoPE with equal position streams == standard RoPE."""
+    from repro.models import rope as R
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2, 16, 4, 32)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(16)[None], (2, 16))
+    std = R.apply_rope(x, pos, 1e4)
+    mr = R.apply_mrope(x, R.text_positions3(pos), (4, 6, 6), 1e4)
+    np.testing.assert_allclose(np.asarray(std), np.asarray(mr),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_ssm_chunk_invariance():
+    """Chunked scan result is independent of the chunk size."""
+    cfg = get_config("falcon-mamba-7b").reduced()
+    params = M.init_params(cfg, KEY)
+    batch = _mk_batch(cfg, 2, 32, with_labels=False)
+    outs = []
+    for chunk in (4, 8, 32):
+        c2 = dataclasses.replace(
+            cfg, ssm=dataclasses.replace(cfg.ssm, chunk=chunk))
+        logits, _ = M.forward(params, batch, c2)
+        outs.append(np.asarray(logits))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-4, atol=2e-4)

@@ -1,0 +1,131 @@
+"""Multi-device tests (subprocess with XLA_FLAGS device_count): sharded
+train step vs single-device reference, elastic re-mesh restore, compressed
+psum.  Each test launches a python subprocess because the parent pytest
+process has already locked jax to 1 device."""
+import pathlib
+import subprocess
+import sys
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(script: str, devices: int = 8) -> str:
+    env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+           "PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin",
+           "HOME": "/tmp", "JAX_PLATFORMS": "cpu"}
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"stdout:\n{out.stdout}\nstderr:\n{out.stderr}"
+    return out.stdout
+
+
+def test_sharded_train_step_matches_single_device():
+    """(data=4, model=2) sharded loss == unsharded loss, same batch."""
+    out = _run(r"""
+import dataclasses, numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.launch.mesh import make_local_mesh
+from repro.launch.steps import make_train_step
+from repro.models.model import PerfConfig
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_init
+from repro.data import SyntheticLM
+
+cfg = dataclasses.replace(get_config("stablelm-1.6b").reduced(),
+                          n_layers=2, vocab=512)
+cell = ShapeCell("t", 32, 8, "train")
+perf = PerfConfig(remat="none", accum_steps=2)
+ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=10)
+pipe = SyntheticLM(cfg.vocab, 32, 8, seed=0)
+batch = {k: jnp.asarray(v) for k, v in pipe.microbatched(0, 2).items()}
+
+losses = {}
+for name, mesh in (("multi", make_local_mesh(4, 2)),
+                   ("single", make_local_mesh(1, 1))):
+    # init per mesh: the train step DONATES params/opt buffers
+    params = M.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    ts, _ = make_train_step(cfg, cell, mesh, perf=perf, opt_cfg=ocfg,
+                            dtype=jnp.float32)
+    p2, o2, m = ts(params, adamw_init(params), batch)
+    losses[name] = float(m["loss"])
+print("LOSSES", losses["multi"], losses["single"])
+assert abs(losses["multi"] - losses["single"]) < 5e-4, losses
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_elastic_remesh_restore():
+    """Checkpoint saved on a (4,2) mesh restores onto (2,2) and (1,1)."""
+    out = _run(r"""
+import tempfile, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.checkpoint import save, restore
+
+tree = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8),
+        "v": jnp.arange(16, dtype=jnp.float32)}
+specs = {"w": P("data", "model"), "v": P("model")}
+mesh_a = jax.make_mesh((4, 2), ("data", "model"))
+sharded = {k: jax.device_put(v, NamedSharding(mesh_a, specs[k]))
+           for k, v in tree.items()}
+d = tempfile.mkdtemp()
+save(d, 1, sharded)
+
+mesh_b = jax.make_mesh((2, 2), ("data", "model"))
+target = jax.eval_shape(lambda: tree)
+out = restore(d, 1, target, mesh=mesh_b, specs=specs)
+for k in tree:
+    np.testing.assert_array_equal(np.asarray(out[k]), np.asarray(tree[k]))
+    assert out[k].sharding.mesh.shape["data"] == 2
+out2 = restore(d, 1, target)           # single-device restore
+for k in tree:
+    np.testing.assert_array_equal(np.asarray(out2[k]), np.asarray(tree[k]))
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_compressed_psum_shard_map():
+    """int8 EF gradient all-reduce over the data axis ~= exact mean."""
+    out = _run(r"""
+import functools, numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.optim.compress import compressed_psum
+
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(0)
+g = jnp.asarray(rng.normal(size=(8, 128)).astype(np.float32))
+res = jnp.zeros((8, 128), jnp.float32)
+
+@functools.partial(shard_map, mesh=mesh,
+                   in_specs=(P("data", None), P("data", None)),
+                   out_specs=(P("data", None), P("data", None)))
+def sync(gs, rs):
+    mean, new_r = compressed_psum(gs[0], rs[0], "data")
+    return mean[None], new_r[None]
+
+mean, new_res = sync(g, res)
+true_mean = np.asarray(g).mean(0)
+got = np.asarray(mean)[0]
+err = np.abs(got - true_mean).max()
+scale = np.abs(np.asarray(g)).max() / 127.0
+assert err < 2 * scale, (err, scale)
+print("OK", err)
+""")
+    assert "OK" in out
+
+
+def test_dryrun_entrypoint_single_cell():
+    """The dry-run CLI itself (512 devices) on the smallest cell."""
+    out = _run(r"""
+import subprocess, sys, os, pathlib, tempfile
+# direct invocation of the module (it sets its own XLA_FLAGS first)
+import runpy
+sys.argv = ["dryrun", "--arch", "whisper-base", "--shape", "train_4k",
+            "--mesh", "multi", "--out", tempfile.mkdtemp(), "--force"]
+runpy.run_module("repro.launch.dryrun", run_name="__main__")
+print("OK")
+""", devices=512)
+    assert "OK" in out

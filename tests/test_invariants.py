@@ -1,0 +1,168 @@
+"""Cross-cutting system invariants (property-based where useful)."""
+import dataclasses
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isa, thermal
+from repro.core.engine import APEngine, PassSchedule
+
+
+# ----------------------------------------------------- truth-table compiler
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 1 << 16), n_in=st.integers(2, 3))
+def test_compiled_truth_table_equals_direct_application(seed, n_in):
+    """Executing a compiled table on the AP == applying fn row-wise, for
+    any function with disjoint output columns (always conflict-free)."""
+    rng = np.random.default_rng(seed)
+    table = {tuple((x >> i) & 1 for i in range(n_in)):
+             tuple(rng.integers(0, 2, 2)) for x in range(1 << n_in)}
+    fn = lambda bits: table[tuple(bits)]
+
+    eng = APEngine(n_words=128, n_bits=n_in + 2)
+    in_cols = list(range(n_in))
+    out_cols = [n_in, n_in + 1]
+    vals = rng.integers(0, 1 << n_in, 128, dtype=np.uint64)
+    eng.load(isa.Field(0, n_in), vals)
+    passes = isa.compile_table(in_cols, out_cols, fn)
+    if passes:
+        eng.run(isa.schedule(passes))
+    got = eng.peek(isa.Field(n_in, 2))
+    want = np.array([table[tuple((int(v) >> i) & 1 for i in range(n_in))]
+                     for v in vals])
+    want_int = want[:, 0] + 2 * want[:, 1]
+    np.testing.assert_array_equal(got, want_int)
+
+
+def test_schedule_concat_equals_sequential_runs():
+    rng = np.random.default_rng(0)
+    s1 = PassSchedule.build([([0, 1], [1, 0], [2], [1]),
+                             ([2], [1], [3], [1])])
+    s2 = PassSchedule.build([([3, 0], [1, 1], [1, 2], [0, 0])])
+    vals = rng.integers(0, 16, 64, dtype=np.uint64)
+
+    eng_a = APEngine(n_words=64, n_bits=8)
+    eng_a.load(isa.Field(0, 4), vals)
+    eng_a.run(s1)
+    eng_a.run(s2)
+
+    eng_b = APEngine(n_words=64, n_bits=8)
+    eng_b.load(isa.Field(0, 4), vals)
+    eng_b.run(PassSchedule.concat([s1, s2]))
+
+    np.testing.assert_array_equal(eng_a.peek(isa.Field(0, 8)),
+                                  eng_b.peek(isa.Field(0, 8)))
+    assert eng_a.cycles == eng_b.cycles
+    assert eng_a.energy == pytest.approx(eng_b.energy)
+
+
+# ------------------------------------------------------------ MoE dispatch
+def test_moe_groups_invariance_without_drops():
+    """groups=1 vs groups=4 give identical outputs when capacity is ample
+    (grouping only changes WHERE tokens sit in the dispatch buffer)."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.models import moe as moe_mod
+
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=100.0))
+    key = jax.random.PRNGKey(0)
+    params = moe_mod.moe_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y1, aux1 = moe_mod.moe_ffn(params, x, cfg, groups=1)
+    y4, aux4 = moe_mod.moe_ffn(params, x, cfg, groups=4)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y4),
+                               rtol=1e-5, atol=1e-5)
+    assert float(aux1) == pytest.approx(float(aux4), rel=1e-5)
+
+
+def test_moe_identity_experts_preserve_combine_weights():
+    """With every expert ~ identity-ish (zero weights -> zero output), the
+    routed output is exactly the shared-expert output: combine never
+    injects mass for dropped or phantom tokens."""
+    from repro.configs import get_config
+    from repro.models import moe as moe_mod
+
+    cfg = get_config("deepseek-v2-lite-16b").reduced()
+    params = moe_mod.moe_init(jax.random.PRNGKey(0), cfg)
+    params["experts"] = jax.tree_util.tree_map(
+        jnp.zeros_like, params["experts"])
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    y, _ = moe_mod.moe_ffn(params, x, cfg, groups=2)
+    from repro.models.layers import swiglu
+    want = swiglu(params["shared"], x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------- optimizer
+def test_adamw_bf16_moments_track_f32():
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    params = {"w": jnp.ones((32, 32)) * 0.5}
+    g = {"w": jnp.full((32, 32), 0.01)}
+    cfgs = {
+        "f32": AdamWConfig(lr=1e-2, warmup_steps=1),
+        "bf16": AdamWConfig(lr=1e-2, warmup_steps=1,
+                            moments_dtype=jnp.bfloat16),
+    }
+    outs = {}
+    for name, cfg in cfgs.items():
+        p, o = params, adamw_init(params, cfg)
+        for _ in range(5):
+            p, o, _ = adamw_update(p, g, o, cfg)
+        outs[name] = np.asarray(p["w"])
+    np.testing.assert_allclose(outs["bf16"], outs["f32"], rtol=2e-2)
+
+
+def test_adamw_schedule_warmup_then_decay():
+    from repro.optim import AdamWConfig
+    from repro.optim.adamw import schedule
+
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(schedule(jnp.float32(s), cfg)) for s in range(1, 100, 7)]
+    peak = max(lrs)
+    assert lrs.index(peak) <= 2            # warmup reaches peak early
+    assert lrs[-1] < peak                   # cosine decays
+    assert lrs[-1] >= cfg.lr * cfg.min_lr_frac - 1e-6
+
+
+# --------------------------------------------------------------- thermal
+def test_steady_state_energy_conservation():
+    """At steady state, flux into the package lump equals total power."""
+    rng = np.random.default_rng(0)
+    grid = thermal.Grid(die_w=5e-3, ny=24, nx=24, margin=6)
+    power = rng.uniform(0, 2e-3, size=(4, 24, 24)).astype(np.float32)
+    F = grid.fields()
+    p_dom = grid.pad_power(power)
+    m = grid.margin
+    p_dom = jnp.pad(p_dom, ((0, 0), (m, m), (m, m)))
+    dT = thermal._cg_solve_fields(p_dom, F, tol=1e-10)
+    flux_out = float(jnp.sum(F["g_pkg"] * dT))
+    assert flux_out == pytest.approx(float(power.sum()), rel=1e-3)
+
+
+def test_thermal_superposition():
+    """The steady-state operator is linear: T(P1+P2) == T(P1)+T(P2)."""
+    rng = np.random.default_rng(1)
+    grid = thermal.Grid(die_w=4e-3, ny=16, nx=16)
+    p1 = rng.uniform(0, 1e-3, (4, 16, 16)).astype(np.float32)
+    p2 = rng.uniform(0, 1e-3, (4, 16, 16)).astype(np.float32)
+    t1 = np.asarray(thermal.steady_state(p1, grid)) - thermal.AMBIENT_C
+    t2 = np.asarray(thermal.steady_state(p2, grid)) - thermal.AMBIENT_C
+    t12 = np.asarray(thermal.steady_state(p1 + p2, grid)) - thermal.AMBIENT_C
+    np.testing.assert_allclose(t12, t1 + t2, rtol=1e-3, atol=1e-3)
+
+
+def test_transient_approaches_steady_state():
+    grid = thermal.Grid(die_w=3e-3, ny=8, nx=8)
+    power = np.full((4, 8, 8), 1e-3, np.float32)
+    t_ss = np.asarray(thermal.steady_state(power, grid))
+    t_tr, peaks = thermal.transient_solve(power, grid, t_end=2.0)
+    # transient temperature of the silicon layers approaches steady state
+    np.testing.assert_allclose(np.asarray(t_tr)[:4], t_ss, atol=1.5)

@@ -1,0 +1,77 @@
+"""Pallas flash_attention kernel vs jnp oracle: shape/dtype/mask sweeps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ops, ref
+
+
+def _mk(rng, B, sq, sk, hq, hkv, dh, dtype):
+    q = jnp.asarray(rng.normal(size=(B, sq, hq, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(B, sk, hkv, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(B, sk, hkv, dh)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("B,sq,sk,hq,hkv,dh", [
+    (2, 64, 64, 4, 4, 32),      # MHA square
+    (2, 64, 64, 4, 2, 32),      # GQA
+    (1, 128, 128, 8, 1, 64),    # MQA
+    (2, 1, 96, 4, 4, 32),       # decode: 1 query vs KV cache
+    (1, 50, 70, 2, 1, 16),      # ragged -> padding path
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_matches_ref_fp32(B, sq, sk, hq, hkv, dh, causal):
+    rng = np.random.default_rng(B * sq + sk)
+    q, k, v = _mk(rng, B, sq, sk, hq, hkv, dh, jnp.float32)
+    r = ref.mha(q, k, v, causal=causal)
+    g = ops.mha(q, k, v, causal=causal, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(g),
+                               rtol=1e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [16, 48, 129])
+def test_sliding_window(window):
+    rng = np.random.default_rng(window)
+    q, k, v = _mk(rng, 1, 128, 128, 4, 2, 32, jnp.float32)
+    r = ref.mha(q, k, v, causal=True, window=window)
+    g = ops.mha(q, k, v, causal=True, window=window, block_q=32, block_k=32)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(g),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_bf16_inputs():
+    rng = np.random.default_rng(0)
+    q, k, v = _mk(rng, 2, 64, 64, 4, 4, 32, jnp.bfloat16)
+    r = ref.mha(q, k, v, causal=True).astype(jnp.float32)
+    g = ops.mha(q, k, v, causal=True, block_q=32, block_k=32).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(g),
+                               rtol=2e-2, atol=2e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1 << 16),
+       sq=st.sampled_from([1, 17, 32, 64]),
+       extra=st.integers(0, 64),
+       hkv=st.sampled_from([1, 2, 4]),
+       causal=st.booleans())
+def test_property_flash(seed, sq, extra, hkv, causal):
+    rng = np.random.default_rng(seed)
+    sk = sq + extra
+    q, k, v = _mk(rng, 1, sq, sk, 4, hkv, 16, jnp.float32)
+    r = ref.mha(q, k, v, causal=causal)
+    g = ops.mha(q, k, v, causal=causal, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(g),
+                               rtol=1e-5, atol=2e-5)
+
+
+def test_probability_mass_is_normalized():
+    """Output of attention over constant V equals V (softmax sums to 1)."""
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 32, 2, 16)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 32, 2, 16)).astype(np.float32))
+    v = jnp.ones((1, 32, 2, 16), jnp.float32) * 3.5
+    g = ops.mha(q, k, v, causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(np.asarray(g), 3.5, rtol=1e-5)

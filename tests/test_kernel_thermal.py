@@ -1,0 +1,63 @@
+"""Pallas thermal_stencil kernel vs jnp oracle + CG equivalence."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import thermal
+from repro.kernels.thermal_stencil import ops
+
+
+GS = [(4, 64, 64), (4, 32, 128), (1, 16, 16), (6, 40, 24)]
+
+
+@pytest.mark.parametrize("shape", GS)
+@pytest.mark.parametrize("block_y", [4, 16, 32])
+def test_stencil_matches_oracle(shape, block_y):
+    rng = np.random.default_rng(sum(shape))
+    T = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    g_lat, g_vert, g_pkg = 5.5e-3, 1.2e-2, 3.1e-4
+    ref = thermal.apply_operator(T, g_lat, g_vert, g_pkg)
+    got = ops.apply_operator(T, g_lat, g_vert, g_pkg, block_y=block_y)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1 << 16), ny=st.sampled_from([8, 16, 24, 48]),
+       nx=st.sampled_from([8, 16, 32]))
+def test_property_stencil(seed, ny, nx):
+    rng = np.random.default_rng(seed)
+    T = jnp.asarray(rng.normal(size=(4, ny, nx)).astype(np.float32))
+    g = rng.uniform(1e-4, 1e-1, 3)
+    ref = thermal.apply_operator(T, *g)
+    got = ops.apply_operator(T, *g, block_y=8)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(got),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_cg_pallas_equals_cg_jnp():
+    """steady_state via the Pallas CG equals the jnp CG to solver tolerance."""
+    rng = np.random.default_rng(0)
+    grid = thermal.Grid(die_w=5e-3, ny=32, nx=32)
+    power = rng.uniform(0, 1e-3, size=(4, 32, 32)).astype(np.float32)
+    t_jnp = np.asarray(thermal.steady_state(power, grid, use_pallas=False))
+    t_pl = np.asarray(thermal.steady_state(power, grid, use_pallas=True))
+    np.testing.assert_allclose(t_jnp, t_pl, rtol=1e-4, atol=1e-3)
+
+
+def test_operator_is_spd_like():
+    """G is symmetric positive definite on the grid (CG's precondition)."""
+    rng = np.random.default_rng(1)
+    shape = (4, 8, 8)
+    g_lat, g_vert, g_pkg = 1e-2, 2e-2, 1e-3
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    Ax = ops.apply_operator(x, g_lat, g_vert, g_pkg, block_y=4)
+    Ay = ops.apply_operator(y, g_lat, g_vert, g_pkg, block_y=4)
+    # symmetry: <y, Ax> == <x, Ay>
+    assert float(jnp.vdot(y, Ax)) == pytest.approx(float(jnp.vdot(x, Ay)),
+                                                   rel=1e-4)
+    # positive definiteness on a nonzero vector
+    assert float(jnp.vdot(x, Ax)) > 0

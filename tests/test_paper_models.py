@@ -1,0 +1,119 @@
+"""Validation of the paper's §3 analytic models against its own numbers.
+
+Every assertion cites the paper location it reproduces (see DESIGN.md table).
+"""
+import numpy as np
+import pytest
+
+from repro.core import models as M
+
+
+def test_ap_area_53mm2():
+    """§3.1: n_AP = 2^20 PUs => A_AP = 53 mm^2."""
+    dp = M.paper_design_point("dmm")
+    assert dp.ap_area_mm2 == pytest.approx(53.0, rel=0.03), dp.ap_area_mm2
+
+
+def test_simd_area_5p3mm2_at_768_pus():
+    """§3.1: same-performance SIMD has 768 PUs and A_SIMD = 5.3 mm^2."""
+    dp = M.paper_design_point("dmm")
+    assert dp.simd_n_pus == pytest.approx(768, abs=2), dp.simd_n_pus
+    assert dp.simd_area_mm2 == pytest.approx(5.3, rel=0.05), dp.simd_area_mm2
+
+
+def test_dmm_speedup_350():
+    """Fig 6 black dotted line: S = 350 at the comparison point."""
+    dp = M.paper_design_point("dmm")
+    assert dp.speedup == pytest.approx(350.0, rel=0.01)
+
+
+def test_power_ratio_exceeds_2x():
+    """Fig 7 / §3.2: 'SIMD consumes more than twice the power of AP'."""
+    dp = M.paper_design_point("dmm")
+    assert 2.0 < dp.power_ratio < 3.0, dp.power_ratio
+
+
+def test_power_density_ratio_about_25x():
+    """§3.2: 'the power density is about twenty five times higher'."""
+    dp = M.paper_design_point("dmm")
+    assert 20.0 < dp.power_density_ratio < 30.0, dp.power_density_ratio
+
+
+def test_simd_speedup_saturates_ap_grows():
+    """Fig 6 qualitative: SIMD speedup saturates at 1/I_s; AP is linear."""
+    for wl in M.WORKLOADS.values():
+        areas = np.geomspace(0.5, 20000, 40)  # mm^2 (far past saturation)
+        s_simd, s_ap = M.speedup_vs_area_curves(wl.name, areas)
+        assert s_simd[-1] <= 1.0 / wl.i_s + 1e-6
+        # SIMD gains < 2% over the last decade of area -> saturation
+        assert s_simd[-1] / max(s_simd[-10], 1e-9) < 1.05
+        # AP speedup is linear in area
+        ratio = s_ap[-1] / s_ap[0]
+        assert ratio == pytest.approx(areas[-1] / areas[0], rel=1e-6)
+
+
+def test_break_even_exists_for_every_workload():
+    """Fig 6: every workload has a finite break-even area."""
+    for name in M.WORKLOADS:
+        a = M.break_even_area_mm2(name)
+        assert np.isfinite(a) and 0.01 < a < 1000, (name, a)
+
+
+def test_break_even_ordering_follows_arithmetic_intensity():
+    """Higher sync intensity (lower arithmetic intensity) => SIMD saturates
+    sooner => AP breaks even at smaller area.  Fig 4: AI(bs) > AI(dmm) > ..."""
+    b = {n: M.break_even_area_mm2(n) for n in M.WORKLOADS}
+    # BS is embarrassingly parallel (tiny I_s): SIMD stays competitive longest
+    assert b["bs"] > b["dmm"]
+
+
+def test_ap_dynamic_power_bracket_matches_eq17():
+    """eq (17) closed form: 1/8 + 7/8*0.1 + 3/16*0.1 + 21/16*0.75."""
+    want = 1 / 8 + 7 / 8 * 0.1 + 3 / 16 * 0.1 + 21 / 16 * 0.75
+    assert M.ap_dynamic_power_per_pu_norm() == pytest.approx(want)
+
+
+def test_fft_same_area_same_perf_circle():
+    """Fig 6/7 red circles: at FFT's break-even area both machines deliver the
+    same speedup, and SIMD burns strictly more power there (§3.2)."""
+    a_mm2 = M.break_even_area_mm2("fft")
+    wl = M.WORKLOADS["fft"]
+    a_norm = a_mm2 / (M.A_SRAM_UM2 * 1e-6)
+    s_simd = M.simd_speedup(M.simd_n_pus(a_norm), wl)
+    s_ap = M.ap_speedup(M.ap_n_pus(a_norm), wl)
+    assert s_simd == pytest.approx(s_ap, rel=0.01)
+    p_simd = M.simd_power_W(M.simd_n_pus(a_norm), wl)
+    p_ap = M.ap_power_W(M.ap_n_pus(a_norm))
+    assert p_simd > p_ap
+
+
+def test_engine_measured_energy_matches_eq16_expectation():
+    """The engine's measured per-pass energy equals the paper's closed-form
+    expectation (eq 16) when match probability is 1/8 — i.e. on uniform
+    random data through the full-adder pass schedule."""
+    from repro.core import isa
+    from repro.core.engine import APEngine
+    rng = np.random.default_rng(0)
+    n, m = 4096, 16
+    eng = APEngine(n_words=n, n_bits=64)
+    a, b, c = eng.alloc.alloc(m), eng.alloc.alloc(m), eng.alloc.alloc(1)
+    eng.load(a, rng.integers(0, 1 << m, n, dtype=np.uint64))
+    eng.load(b, rng.integers(0, 1 << m, n, dtype=np.uint64))
+    eng.clear(c)
+    e0 = eng.energy
+    eng.run(isa.add(a, b, c))
+    measured = eng.energy - e0
+    # eq (16): per pass, 3-bit compare + 2-bit write with p(match)=1/8
+    per_pass = 3 * (1 / 8 * M.P_MATCH + 7 / 8 * M.P_MISMATCH) \
+        + 2 * (1 / 8 * 1.0 + 7 / 8 * M.P_MISWRITE)
+    expected = per_pass * n * 4 * m
+    assert measured == pytest.approx(expected, rel=0.08), \
+        (measured, expected)
+
+
+def test_ap_backend_estimate_sane():
+    est = M.ap_backend_estimate(total_flops=1e12)
+    assert est["seconds"] > 0 and est["joules"] > 0
+    # 1 TFLOP of MACs on 2^20 PUs at 5500 cycles/MAC, 1 GHz:
+    want_s = (1e12 / 2 / 2**20) * 5500 / 1e9
+    assert est["seconds"] == pytest.approx(want_s)

@@ -1,0 +1,91 @@
+"""Unit tests for the HLO collective parser + roofline term arithmetic."""
+import pytest
+
+from repro.launch import roofline as RF
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[16,512]{1,0} parameter(0)
+  %ag = bf16[256,512]{1,0} all-gather(%p0), replica_groups=[16,16]<=[256], dimensions={0}
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={{0,1,2,3}}, to_apply=%sum
+  %rs = f32[64,32]{1,0} reduce-scatter(%y), replica_groups=[8,32]<=[256], dimensions={0}
+  %cp = bf16[128]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %tup = (f32[256]{0}, f32[256]{0}) all-reduce(%a, %b), replica_groups=[16,16]<=[256]
+  %dot = bf16[16,16]{1,0} dot(%p0, %p0)
+}
+"""
+
+
+def test_parse_collectives_counts_and_kinds():
+    out = RF.parse_collectives(HLO)
+    assert out["counts"]["all-gather"] == 1
+    assert out["counts"]["all-reduce"] == 2          # incl. tuple-typed
+    assert out["counts"]["reduce-scatter"] == 1
+    assert out["counts"]["collective-permute"] == 1
+    assert out["counts"]["all-to-all"] == 0
+
+
+def test_parse_collectives_wire_formulas():
+    out = RF.parse_collectives(HLO)
+    # all-gather: result 256*512*2 bytes, group 16 -> R*(n-1)/n
+    ag = 256 * 512 * 2 * 15 / 16
+    assert out["all-gather"] == pytest.approx(ag)
+    # all-reduce #1: f32[1024], explicit group of 4 -> 2R*3/4;
+    # tuple all-reduce: 2 x f32[256], group 16 -> 2*(2048)*15/16
+    ar = 2 * 1024 * 4 * 3 / 4 + 2 * (2 * 256 * 4) * 15 / 16
+    assert out["all-reduce"] == pytest.approx(ar)
+    # reduce-scatter: result f32[64,32] is the shard; group 32 -> R*(n-1)
+    rs = 64 * 32 * 4 * 31
+    assert out["reduce-scatter"] == pytest.approx(rs)
+    # collective-permute: R
+    assert out["collective-permute"] == pytest.approx(128 * 2)
+    assert out["total_wire_bytes"] == pytest.approx(
+        ag + ar + rs + 128 * 2)
+
+
+def test_parse_ignores_non_collectives():
+    out = RF.parse_collectives("%d = bf16[8,8]{1,0} dot(%a, %b)\n")
+    assert out["total_wire_bytes"] == 0.0
+
+
+def test_roofline_terms_and_dominance():
+    terms = RF.roofline(
+        {"flops": RF.PEAK_FLOPS, "bytes accessed": RF.HBM_BW * 2},
+        {"total_wire_bytes": RF.ICI_BW * 0.5},
+        model_flops=RF.PEAK_FLOPS * 0.75)
+    assert terms.compute_s == pytest.approx(1.0)
+    assert terms.memory_s == pytest.approx(2.0)
+    assert terms.collective_s == pytest.approx(0.5)
+    assert terms.dominant == "memory"
+    assert terms.bound_s == pytest.approx(2.0)
+    assert terms.useful_ratio == pytest.approx(0.75)
+    assert terms.roofline_fraction == pytest.approx(0.5)
+
+
+def test_model_flops_train_vs_decode():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import SHAPES, get_config
+    from repro.launch.steps import params_sds
+
+    cfg = get_config("stablelm-1.6b")
+    psds = params_sds(cfg, jnp.bfloat16)
+    n = RF.count_params(psds)
+    assert 1.5e9 < n < 2.1e9          # 1.6B class (+ padded vocab rows)
+    train = RF.model_flops_per_device(cfg, SHAPES["train_4k"], psds, 256)
+    dec = RF.model_flops_per_device(cfg, SHAPES["decode_32k"], psds, 256)
+    # train: 6*N*B*S/chips; decode: 2*N*B/chips
+    assert train == pytest.approx(6 * n * 256 * 4096 / 256)
+    assert dec == pytest.approx(2 * n * 128 / 256)
+
+
+def test_moe_active_params_discounted():
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.launch.steps import params_sds
+
+    cfg = get_config("deepseek-v2-lite-16b")
+    psds = params_sds(cfg, jnp.bfloat16)
+    total = RF.count_params(psds)
+    active = RF.count_active_params(cfg, psds)
+    assert active < 0.35 * total       # 6/64 routed utilization dominates

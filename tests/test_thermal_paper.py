@@ -1,0 +1,73 @@
+"""Paper §4 thermal claims (HotSpot-equivalent solve, calibrated stack).
+
+Reproduction bands (DESIGN.md §7.2 documents the calibration): the paper's
+own HotSpot configuration is unpublished, so one explicit constant set
+drives BOTH dies; bands below allow a few C of slack around the paper's
+numbers.  Our AP comes out even MORE uniform than the paper's ~3C span —
+conservative in the direction that favors the paper's conclusion.
+"""
+import numpy as np
+import pytest
+
+from repro.core import models as M
+from repro.core.floorplan import thermal_comparison
+
+DRAM_LIMIT_C = 85.0     # §4.3: max operating temp of commercial DRAM
+
+
+@pytest.fixture(scope="module")
+def comparison():
+    return thermal_comparison(grid_ap=128, grid_simd=64, workload="dmm")
+
+
+def test_ap_peak_band(comparison):
+    """Fig 10: AP top-layer peak ~= 55 C."""
+    peak = comparison["ap"]["peak_C"][0]
+    assert 48.0 < peak < 58.0, peak
+
+
+def test_ap_near_uniform(comparison):
+    """Fig 10: AP span ~3 C (ours is tighter -> still 'close to uniform')."""
+    span = comparison["ap"]["span_C"][0]
+    assert span < 3.5, span
+
+
+def test_simd_band(comparison):
+    """Fig 12: SIMD top layer ranges 98..128 C."""
+    peak = comparison["simd"]["peak_C"][0]
+    mn = comparison["simd"]["min_C"][0]
+    assert 120.0 < peak < 140.0, peak
+    assert 95.0 < mn < 112.0, mn
+    assert 20.0 < peak - mn < 40.0     # paper: 30 C span
+
+
+def test_dram_stacking_verdict(comparison):
+    """§4.3: SIMD exceeds the DRAM limit everywhere that matters; AP never."""
+    ap_peak = max(comparison["ap"]["peak_C"])
+    simd_min = comparison["simd"]["min_C"][0]
+    assert ap_peak < DRAM_LIMIT_C               # AP: 3D DRAM stacking OK
+    assert simd_min > DRAM_LIMIT_C              # SIMD: blocked outright
+
+
+def test_layer_ordering(comparison):
+    """Top layer (farthest from the sink) is the hottest (Fig 13)."""
+    for name in ("ap", "simd"):
+        peaks = comparison[name]["peak_C"]
+        assert peaks[0] == max(peaks), peaks
+
+
+def test_same_performance_inputs(comparison):
+    """The thermal runs use the paper's same-performance design point."""
+    dp = comparison["design_point"]
+    assert dp.speedup == pytest.approx(350, rel=0.01)
+    assert dp.power_ratio > 2.0
+
+
+def test_pallas_and_jnp_solvers_agree():
+    r1 = thermal_comparison(grid_ap=64, grid_simd=32, workload="dmm",
+                            use_pallas=False)
+    r2 = thermal_comparison(grid_ap=64, grid_simd=32, workload="dmm",
+                            use_pallas=True)
+    for n in ("ap", "simd"):
+        np.testing.assert_allclose(r1[n]["peak_C"], r2[n]["peak_C"],
+                                   rtol=1e-3, atol=0.1)

@@ -1,0 +1,107 @@
+"""Paper §3.1 workloads on the AP: correctness + the cycle-count claims."""
+import numpy as np
+import pytest
+
+from repro.workloads import blackscholes as bs
+from repro.workloads import dmm, fft
+
+
+# ------------------------------------------------------------------ DMM
+def test_dmm_exact():
+    rng = np.random.default_rng(0)
+    A = rng.integers(0, 64, (8, 8), dtype=np.uint64)
+    B = rng.integers(0, 64, (8, 8), dtype=np.uint64)
+    C, ctr = dmm.ap_matmul(A, B, m=6)
+    np.testing.assert_array_equal(C, dmm.reference(A, B))
+    assert ctr["mac_cycles"] > 0
+
+
+def test_dmm_cycles_scale_with_n_not_pus():
+    """sqrt(N) sequential MACs: cycles ~ n * O(m^2), NOT n^2 (PU count)."""
+    rng = np.random.default_rng(1)
+    cycles = {}
+    for n in (4, 8):
+        A = rng.integers(0, 32, (n, n), dtype=np.uint64)
+        B = rng.integers(0, 32, (n, n), dtype=np.uint64)
+        C, ctr = dmm.ap_matmul(A, B, m=5)
+        np.testing.assert_array_equal(C, dmm.reference(A, B))
+        cycles[n] = ctr["mac_cycles"]
+    ratio = cycles[8] / cycles[4]
+    # linear in n (ratio ~2 with carry-ripple endcaps), far from PU-count x4
+    assert 1.8 < ratio < 2.6, ratio
+
+
+# ------------------------------------------------------------------ FFT
+@pytest.mark.parametrize("N", [8, 16])
+def test_fft_matches_numpy(N):
+    rng = np.random.default_rng(N)
+    x = (rng.normal(size=N) + 1j * rng.normal(size=N)) * (0.4 / np.sqrt(N))
+    X, ctr = fft.ap_fft(x, m=16, frac=12)
+    ref = fft.reference(x)
+    rel = np.max(np.abs(X - ref)) / np.max(np.abs(ref))
+    assert rel < 0.01, rel
+
+
+def test_fft_compute_cycles_length_independent_per_stage():
+    """Word-parallel butterflies: per-stage compute cycles do not grow with N
+    (only the stage count log2 N does) — eq (7)'s premise."""
+    rng = np.random.default_rng(3)
+    per_stage = {}
+    for N in (8, 32):
+        x = (rng.normal(size=N) + 1j * rng.normal(size=N)) * (0.3 / np.sqrt(N))
+        X, ctr = fft.ap_fft(x, m=12, frac=9, interconnect="parallel")
+        ref = fft.reference(x)
+        assert np.max(np.abs(X - ref)) / np.max(np.abs(ref)) < 0.05
+        stages = int(np.log2(N))
+        per_stage[N] = ctr["cycles"] / stages
+    # twiddle broadcast adds 2^s passes/stage; compute dominates => ~flat
+    assert per_stage[32] / per_stage[8] < 1.25
+
+
+def test_fft_serial_interconnect_costs_more():
+    rng = np.random.default_rng(4)
+    N = 16
+    x = (rng.normal(size=N) + 1j * rng.normal(size=N)) * (0.3 / np.sqrt(N))
+    _, c_par = fft.ap_fft(x, m=12, frac=9, interconnect="parallel")
+    _, c_ser = fft.ap_fft(x, m=12, frac=9, interconnect="serial")
+    assert c_ser["cycles"] > c_par["cycles"]
+
+
+# ------------------------------------------------------------ Black-Scholes
+def test_blackscholes_accuracy():
+    rng = np.random.default_rng(5)
+    n = 32
+    S = rng.uniform(0.8, 1.6, n)
+    K = rng.uniform(0.8, 1.6, n)
+    T = rng.uniform(0.3, 2.0, n)
+    sig = rng.uniform(0.15, 0.6, n)
+    C, ctr = bs.ap_blackscholes(S, K, T, sig, r=0.05)
+    ref = bs.reference(S, K, T, sig, r=0.05)
+    assert np.max(np.abs(C - ref)) < 0.01  # Q6.10 + 10-bit LUT envelope
+    assert ctr["cycles"] > 0
+
+
+def test_blackscholes_cycles_independent_of_n():
+    """The paper's embarrassingly-parallel case: same cycles for any N."""
+    rng = np.random.default_rng(6)
+    cyc = {}
+    for n in (32, 128):
+        S = rng.uniform(0.9, 1.4, n)
+        K = rng.uniform(0.9, 1.4, n)
+        T = rng.uniform(0.5, 1.5, n)
+        sig = rng.uniform(0.2, 0.5, n)
+        _, ctr = bs.ap_blackscholes(S, K, T, sig)
+        # exclude the sequential result read-out (1 cycle/word, §2.1)
+        cyc[n] = ctr["cycles"] - ctr["read_cycles"]
+    assert cyc[32] == cyc[128]
+
+
+def test_blackscholes_monotone_in_spot():
+    """Sanity: call price increases with S (no sign/LUT pathologies)."""
+    n = 32
+    S = np.linspace(0.8, 1.6, n)
+    K = np.full(n, 1.0)
+    T = np.full(n, 1.0)
+    sig = np.full(n, 0.3)
+    C, _ = bs.ap_blackscholes(S, K, T, sig)
+    assert (np.diff(C) > -0.01).all()
