@@ -1,9 +1,23 @@
-"""Paper §4 / Figs 10, 12, 13: AP vs SIMD 4-layer-stack thermal comparison."""
+"""Paper §4 / Figs 10, 12, 13: AP vs SIMD 4-layer-stack thermal comparison.
+
+Two sections:
+
+1. steady state (the paper's own experiment), and
+2. transient co-simulation — per-workload power traces replayed through the
+   implicit stepper (core/cosim.py), reporting time-resolved peaks and the
+   per-layer time spent above the 85 °C 3D-DRAM ceiling, plus the implicit
+   solver's step-count advantage over the explicit oracle.
+
+``--quick`` shrinks grids/intervals for the CI smoke lane.
+"""
+import argparse
+
 from repro.core.floorplan import thermal_comparison
 
 
-def main():
-    res = thermal_comparison(grid_ap=128, grid_simd=64, workload="dmm")
+def steady_section(grid_ap: int, grid_simd: int) -> None:
+    res = thermal_comparison(grid_ap=grid_ap, grid_simd=grid_simd,
+                             workload="dmm")
     dp = res["design_point"]
     print(f"design point: S={dp.speedup:.0f}  "
           f"AP {dp.ap_power_W:.2f}W/layer @{dp.ap_area_mm2:.1f}mm^2  "
@@ -17,6 +31,59 @@ def main():
     print(f"3D-DRAM (85C limit): AP {'OK' if ap_ok else 'BLOCKED'} / "
           f"SIMD {'OK' if simd_ok else 'BLOCKED'}   "
           f"(paper: AP 55C OK, SIMD 98-128C blocked)")
+
+
+def cosim_section(grid_n: int, n_intervals: int, workloads) -> None:
+    import math
+
+    from repro.core import cosim, thermal
+    from repro.core.floorplan import MM
+
+    print()
+    print(f"transient co-simulation (grid {grid_n}, {n_intervals} intervals, "
+          f"implicit theta-scheme)")
+    t_end = 0.25
+    steps_per_interval = 2
+    res = cosim.run_cosim(workloads=workloads, grid_n=grid_n,
+                          n_intervals=n_intervals, t_end=t_end,
+                          steps_per_interval=steps_per_interval)
+    # implicit step-count advantage vs the CFL-bound explicit oracle, on
+    # the exact grids simulated (the AP and SIMD dies of the first workload)
+    dp = res["design_points"][workloads[0]]
+    n_imp = n_intervals * steps_per_interval
+    for machine, area in (("ap", dp.ap_area_mm2), ("simd", dp.simd_area_mm2)):
+        grid = thermal.Grid(die_w=math.sqrt(area) * MM, ny=grid_n, nx=grid_n,
+                            margin=grid_n // 4)
+        n_exp = max(int(t_end / thermal.explicit_dt(grid)), 1)
+        print(f"steps ({workloads[0]}/{machine} die): explicit oracle "
+              f"{n_exp}, implicit {n_imp} ({n_exp / n_imp:.0f}x fewer)")
+    print("workload,machine,layer,peak_max_C,peak_final_C,span_max_C,"
+          "time_above_85C_s")
+    for w in workloads:
+        for machine in ("ap", "simd"):
+            r = res[w][machine]
+            above = r.time_above()
+            for l in range(r.peak_C.shape[1]):
+                print(f"{w},{machine},{l},{r.peak_C[:, l].max():.1f},"
+                      f"{r.peak_C[-1, l]:.1f},{r.span_C[:, l].max():.2f},"
+                      f"{above[l]:.3f}")
+        ap_above = float(res[w]["ap"].time_above().max())
+        simd_above = float(res[w]["simd"].time_above().max())
+        print(f"# {w}: AP above-85C {ap_above:.3f}s / "
+              f"SIMD above-85C {simd_above:.3f}s of {res['t_end']:.2f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small grids/intervals (CI smoke lane)")
+    args = ap.parse_args()
+    if args.quick:
+        steady_section(grid_ap=64, grid_simd=32)
+        cosim_section(grid_n=16, n_intervals=24, workloads=("dmm", "fft"))
+    else:
+        steady_section(grid_ap=128, grid_simd=64)
+        cosim_section(grid_n=32, n_intervals=64, workloads=("dmm", "fft"))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,55 @@
+"""Power-trace -> transient thermal co-simulation of AP vs SIMD.
+
+Replays each workload's power trace (AP: measured from the engine's exact
+per-pass energy accounting; SIMD: the eq-14 execute/synchronize phase
+model) through the implicit transient solver, and prints the time-resolved
+verdict on the paper's central question: can the die sit under 3D DRAM
+(85 °C ceiling)?
+
+Run:  PYTHONPATH=src python examples/cosim_trace.py [--grid 32] [--t-end 0.25]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import cosim
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grid", type=int, default=32)
+    ap.add_argument("--intervals", type=int, default=64)
+    ap.add_argument("--t-end", type=float, default=0.25)
+    ap.add_argument("--workloads", default="dmm,fft")
+    args = ap.parse_args()
+    workloads = tuple(args.workloads.split(","))
+
+    res = cosim.run_cosim(workloads=workloads, grid_n=args.grid,
+                          n_intervals=args.intervals, t_end=args.t_end)
+    print(f"co-sim: {args.intervals} intervals over {args.t_end:.2f}s, "
+          f"grid {args.grid}, {cosim.DRAM_LIMIT_C:.0f}C 3D-DRAM ceiling")
+    for w in workloads:
+        dp = res["design_points"][w]
+        print(f"\n=== {w}  (same performance: S={dp.speedup:.0f}; "
+              f"AP {dp.ap_power_W:.2f}W/layer vs "
+              f"SIMD {dp.simd_power_W:.2f}W/layer)")
+        for machine in ("ap", "simd"):
+            r = res[w][machine]
+            above = r.time_above()
+            cross = r.crossing_time()
+            print(f"  {machine.upper():4s} layer  peak_max  peak_end  "
+                  f"span_max  t>85C[s]  first>85C[s]")
+            for l in range(r.peak_C.shape[1]):
+                c = f"{cross[l]:.3f}" if np.isfinite(cross[l]) else "never"
+                print(f"       {l}      {r.peak_C[:, l].max():7.1f}  "
+                      f"{r.peak_C[-1, l]:8.1f}  {r.span_C[:, l].max():8.2f}  "
+                      f"{above[l]:8.3f}  {c:>10s}")
+        verdict_ap = "OK for 3D DRAM" if res[w]["ap"].time_above().max() == 0 \
+            else "BLOCKED"
+        verdict_simd = "OK for 3D DRAM" \
+            if res[w]["simd"].time_above().max() == 0 else "BLOCKED"
+        print(f"  verdict: AP {verdict_ap} / SIMD {verdict_simd}")
+
+
+if __name__ == "__main__":
+    main()

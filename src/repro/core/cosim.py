@@ -1,0 +1,344 @@
+"""Power-trace -> transient thermal co-simulation (the CoMeT / Sniper+HotSpot
+pattern, arXiv:2109.12405, applied to the paper's AP-vs-SIMD §4 study).
+
+The steady-state comparison (`floorplan.thermal_comparison`) answers "where
+does each die settle"; this module answers "what does each die *do on the
+way there*" — per-workload hot-spot dynamics, thermal cycling, and the
+time-resolved 85 °C 3D-DRAM verdict.
+
+Pipeline (mirrors the performance-simulator -> thermal-model split of CoMeT):
+
+1. **Trace capture** — `APEngine` meters every compare/write pass with its
+   exact matched-row energy accounting; `engine.power_trace(n)` bins those
+   events into n equal cycle windows (energy-conserving).  The SIMD
+   reference gets an analytic two-phase trace from the eq-(14) execute/sync
+   decomposition (its instantaneous power alternates between the exec and
+   sync levels at the model's duty cycle).
+2. **Frame synthesis** — each interval's total dynamic power modulates the
+   floorplan's *spatial* power map (leakage stays constant), producing a
+   [T, L, NY, NX] power-frame stack over the thermal grid domain.
+3. **Replay** — an implicit theta-scheme stepper (`thermal.pcg_fixed` inner
+   solves, unconditionally stable, so the step is set by the trace interval
+   rather than the explicit CFL bound) scans the frames and records
+   per-layer peak/min per interval.  The whole replay is one `lax.scan`
+   and vmaps over a batch of (workload x machine) design points.
+
+Time base: small AP kernel instances run in microseconds of engine time
+while package thermal constants are ~0.1 s, so the replay *dilates* the
+trace onto a configurable `t_end` — the trace supplies the activity
+profile's shape, the design point supplies its mean wattage (documented in
+README §co-simulation; same epoch-replay convention as HotSpot ptrace).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import models as M
+from repro.core import thermal
+from repro.core.floorplan import MM, APFloorplan, SIMDFloorplan
+
+DRAM_LIMIT_C = 85.0
+
+
+# ---------------------------------------------------------------------------
+# power traces
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PowerTrace:
+    """Per-interval dynamic activity of one die layer (dimensionless).
+
+    ``activity`` has mean 1.0 over the trace, so scaling by a design
+    point's per-layer dynamic wattage preserves its time-averaged power.
+    ``native_s`` is the engine time the trace actually spans (cycles at
+    ``M.AP_CLOCK_HZ``) before replay dilation, 0 for analytic traces.
+    """
+    activity: np.ndarray
+    source: str = ""
+    native_s: float = 0.0
+
+    @property
+    def n_intervals(self) -> int:
+        return int(self.activity.shape[0])
+
+
+def trace_from_counters(counters: dict, n_intervals: int,
+                        source: str = "") -> PowerTrace:
+    """Bin a workload's engine events (``counters['trace_*']``) into an
+    activity profile.  Energy-conserving: mean(activity) == 1 exactly."""
+    from repro.core.engine import bin_energy_trace
+
+    total_cycles = max(int(counters["cycles"]), 1)
+    _, bins = bin_energy_trace(counters["trace_cycles"],
+                               counters["trace_energy"],
+                               total_cycles, n_intervals)
+    mean = bins.mean()
+    if mean <= 0.0:
+        return PowerTrace(np.ones(n_intervals), source,
+                          total_cycles / M.AP_CLOCK_HZ)
+    return PowerTrace(bins / mean, source, total_cycles / M.AP_CLOCK_HZ)
+
+
+@functools.lru_cache(maxsize=None)
+def ap_workload_trace(workload: str, n_intervals: int = 64) -> PowerTrace:
+    """Run a small instance of the named AP workload and bin its measured
+    energy events.  Small instances keep the per-phase structure (MAC
+    sweeps, FFT stages, BS LUT passes) that sets the activity shape."""
+    from repro.workloads import blackscholes as bs
+    from repro.workloads import dmm, fft
+
+    rng = np.random.default_rng(0)
+    if workload == "dmm":
+        A = rng.integers(0, 64, (8, 8), dtype=np.uint64)
+        B = rng.integers(0, 64, (8, 8), dtype=np.uint64)
+        _, ctr = dmm.ap_matmul(A, B, m=6)
+    elif workload == "fft":
+        x = (rng.normal(size=16) + 1j * rng.normal(size=16)) * 0.1
+        _, ctr = fft.ap_fft(x, m=12, frac=9)
+    elif workload == "bs":
+        n = 32
+        _, ctr = bs.ap_blackscholes(rng.uniform(0.9, 1.4, n),
+                                    rng.uniform(0.9, 1.4, n),
+                                    rng.uniform(0.5, 1.5, n),
+                                    rng.uniform(0.2, 0.5, n))
+    else:
+        raise ValueError(f"unknown workload {workload!r}")
+    return trace_from_counters(ctr, n_intervals, source=f"ap:{workload}")
+
+
+def simd_phase_trace(wl: M.Workload, dp: M.DesignPoint,
+                     n_intervals: int = 64,
+                     period_intervals: int = 8) -> PowerTrace:
+    """Analytic SIMD trace: eq (14) splits runtime into execute and
+    synchronize phases; instantaneous dynamic power alternates between the
+    two levels at the duty cycle f_run = (1/n) / (1/n + I_s)."""
+    p_exec_W, p_sync_W, f_run = M.simd_phase_powers(wl, dp.simd_n_pus)
+    # instantaneous levels: average / phase-time-fraction (only the
+    # exec:sync ratio matters; the final mean-1 normalization calibrates)
+    lvl_exec = p_exec_W / max(f_run, 1e-9)
+    lvl_sync = p_sync_W / max(1.0 - f_run, 1e-9)
+    act = np.empty(n_intervals)
+    for i in range(n_intervals):
+        phase = (i % period_intervals) / period_intervals
+        act[i] = lvl_exec if phase < f_run else lvl_sync
+    return PowerTrace(act / act.mean(), source=f"simd:{wl.name}")
+
+
+# ---------------------------------------------------------------------------
+# frame synthesis
+# ---------------------------------------------------------------------------
+
+def power_frames(trace: PowerTrace, pmap: np.ndarray, leak_W: float,
+                 grid: thermal.Grid) -> np.ndarray:
+    """[T, L, NY, NX] power frames over the full thermal domain.
+
+    ``pmap`` is a floorplan layer map (leakage included, as produced by
+    ``*Floorplan.power_map``); leakage stays constant per interval while
+    the dynamic remainder is modulated by the trace activity.  Every
+    silicon layer carries the same map (the §4 convention), the spreader
+    layer and margin ring get zero.
+    """
+    grid_n = pmap.shape[0]
+    leak_map = np.full_like(pmap, leak_W / pmap.size)
+    dyn_map = pmap - leak_map
+    frames_2d = leak_map[None] + trace.activity[:, None, None] * dyn_map[None]
+    T = trace.n_intervals
+    L, n_si = grid.params.n_layers, grid.params.n_si_layers
+    m = grid.margin
+    out = np.zeros((T, L, grid.dom_ny, grid.dom_nx), np.float32)
+    out[:, :n_si, m:m + grid_n, m:m + grid_n] = frames_2d[:, None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# implicit replay core (scan over frames; vmappable over design points)
+# ---------------------------------------------------------------------------
+
+def _replay(frames, F, cap3, interval_dt, theta, t_amb, *,
+            steps_per_interval: int, n_cg: int, n_si: int, margin: int,
+            die_n: int, use_pallas: bool):
+    if use_pallas:
+        from repro.kernels.thermal_stencil import ops as _ops
+        A = lambda v: _ops.apply_operator_fields(v, F)
+    else:
+        A = lambda v: thermal.apply_operator_fields(v, F)
+    dt = interval_dt / steps_per_interval
+    lhs = lambda v: cap3 / dt * v + theta * A(v)
+    Minv = 1.0 / (cap3 / dt + theta * thermal._diag_fields(F))
+
+    def interval(dTc, P):
+        def one(d, _):
+            rhs = P - A(d)
+            return d + thermal.pcg_fixed(lhs, Minv, rhs, n_cg), None
+        dTn, _ = jax.lax.scan(one, dTc, None, length=steps_per_interval)
+        die = dTn[:n_si, margin:margin + die_n, margin:margin + die_n]
+        return dTn, (jnp.max(die, axis=(1, 2)), jnp.min(die, axis=(1, 2)))
+
+    dT0 = jnp.zeros_like(frames[0])
+    dT_end, (mx, mn) = jax.lax.scan(interval, dT0, frames)
+    return dT_end + t_amb, mx + t_amb, mn + t_amb
+
+
+@partial(jax.jit, static_argnames=("steps_per_interval", "n_cg", "n_si",
+                                   "margin", "die_n", "use_pallas"))
+def cosim_transient(frames, F: dict, cap3, interval_dt,
+                    theta: float = 1.0, t_amb: float = thermal.AMBIENT_C, *,
+                    die_n: int, steps_per_interval: int = 2, n_cg: int = 40,
+                    n_si: int = 4, margin: int = 0,
+                    use_pallas: bool = False):
+    """Replay one frame stack.  Returns (T_end [L,NY,NX],
+    peak_C [T,n_si], min_C [T,n_si]) — peaks/mins over the die footprint
+    of the silicon layers only."""
+    return _replay(frames, F, cap3, interval_dt, theta, t_amb,
+                   steps_per_interval=steps_per_interval, n_cg=n_cg,
+                   n_si=n_si, margin=margin, die_n=die_n,
+                   use_pallas=use_pallas)
+
+
+@partial(jax.jit, static_argnames=("steps_per_interval", "n_cg", "n_si",
+                                   "margin", "die_n", "use_pallas"))
+def cosim_transient_batch(frames, F: dict, cap3, interval_dt,
+                          theta: float = 1.0,
+                          t_amb: float = thermal.AMBIENT_C, *,
+                          die_n: int, steps_per_interval: int = 2,
+                          n_cg: int = 40, n_si: int = 4, margin: int = 0,
+                          use_pallas: bool = False):
+    """vmapped replay over a leading batch of design points.
+
+    frames [B,T,L,NY,NX]; each leaf of F and cap3 batched [B,...] (the
+    batch shares one grid shape; conductances/capacities differ per die).
+    """
+    fn = partial(_replay, steps_per_interval=steps_per_interval, n_cg=n_cg,
+                 n_si=n_si, margin=margin, die_n=die_n,
+                 use_pallas=use_pallas)
+    return jax.vmap(lambda fr, Fb, cb: fn(fr, Fb, cb, interval_dt, theta,
+                                          t_amb))(frames, F, cap3)
+
+
+# ---------------------------------------------------------------------------
+# reporting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CosimReport:
+    """Time-resolved thermal summary of one replay."""
+    label: str
+    interval_s: float
+    peak_C: np.ndarray          # [T, n_si]
+    min_C: np.ndarray           # [T, n_si]
+
+    @property
+    def times(self) -> np.ndarray:
+        return self.interval_s * np.arange(1, self.peak_C.shape[0] + 1)
+
+    @property
+    def span_C(self) -> np.ndarray:
+        return self.peak_C - self.min_C
+
+    @property
+    def final_peak_C(self) -> np.ndarray:
+        return self.peak_C[-1]
+
+    def time_above(self, limit_C: float = DRAM_LIMIT_C) -> np.ndarray:
+        """Seconds each layer spent above ``limit_C`` (per-interval
+        granularity, counted on the layer's peak cell)."""
+        return self.interval_s * (self.peak_C > limit_C).sum(axis=0)
+
+    def crossing_time(self, limit_C: float = DRAM_LIMIT_C
+                      ) -> np.ndarray:
+        """First time [s] each layer's peak exceeds ``limit_C`` (inf if
+        it never does)."""
+        above = self.peak_C > limit_C
+        first = np.where(above.any(axis=0), above.argmax(axis=0), -1)
+        t = self.times
+        return np.where(first >= 0, t[np.maximum(first, 0)], np.inf)
+
+
+# ---------------------------------------------------------------------------
+# top-level driver: batched AP-vs-SIMD per-workload co-simulation
+# ---------------------------------------------------------------------------
+
+def comparable_design_point(workload: str) -> M.DesignPoint:
+    """Largest same-performance AP/SIMD pair that exists for a workload.
+
+    A SIMD can only match AP speedups below its synchronization ceiling
+    1/I_s (eq 3).  For dmm/bs the paper's full-size AP (n = 2^20) is
+    comparable; for fft it is not, so the AP is halved until the
+    comparison point exists — same-performance remains the invariant.
+    """
+    if workload not in M.WORKLOADS:
+        raise ValueError(f"unknown workload {workload!r}; expected one of "
+                         f"{sorted(M.WORKLOADS)}")
+    n_ap = M.N_DATA
+    while n_ap >= 1024:
+        try:
+            return M.paper_design_point(workload, n_ap)
+        except ValueError:
+            n_ap //= 2
+    raise ValueError(f"no comparable design point for {workload!r}")
+
+def run_cosim(workloads=("dmm", "fft"), grid_n: int = 32,
+              n_intervals: int = 64, t_end: float = 0.25,
+              steps_per_interval: int = 2, n_cg: int = 40,
+              theta: float = 1.0, stack: thermal.StackParams | None = None,
+              use_pallas: bool = False) -> dict:
+    """The §4 comparison, transient: for each workload, replay the AP's
+    measured trace and the SIMD reference's analytic trace through the
+    same stack in ONE vmapped batch.  Returns
+    ``{workload: {"ap": CosimReport, "simd": CosimReport},
+    "design_points": {...}}``.
+    """
+    stack = stack or thermal.PAPER_STACK
+    margin = grid_n // 4
+    interval_dt = t_end / n_intervals
+
+    labels, all_frames, all_F, all_cap = [], [], [], []
+    dps = {}
+    for w in workloads:
+        dp = comparable_design_point(w)
+        dps[w] = dp
+        wl = M.WORKLOADS[w]
+        ap_fp = APFloorplan(die_w_mm=math.sqrt(dp.ap_area_mm2))
+        simd_fp = SIMDFloorplan(die_w_mm=math.sqrt(dp.simd_area_mm2))
+        cases = (
+            (f"{w}/ap", ap_fp.power_map(grid_n, dp.ap_power_W),
+             ap_fp.leakage_W(), ap_fp.die_w_mm,
+             ap_workload_trace(w, n_intervals)),
+            (f"{w}/simd", simd_fp.power_map(grid_n, dp),
+             simd_fp.leakage_W(dp), simd_fp.die_w_mm,
+             simd_phase_trace(wl, dp, n_intervals)),
+        )
+        for label, pmap, leak_W, die_w_mm, trace in cases:
+            grid = thermal.Grid(die_w=die_w_mm * MM, ny=grid_n, nx=grid_n,
+                                params=stack, margin=margin)
+            labels.append(label)
+            all_frames.append(power_frames(trace, pmap, leak_W, grid))
+            all_F.append(grid.fields())
+            all_cap.append(grid.capacity_field())
+
+    frames = jnp.asarray(np.stack(all_frames))
+    Fb = {k: jnp.stack([F[k] for F in all_F]) for k in all_F[0]}
+    capb = jnp.stack(all_cap)
+    _, peaks, mins = cosim_transient_batch(
+        frames, Fb, capb, interval_dt, theta,
+        steps_per_interval=steps_per_interval, n_cg=n_cg,
+        n_si=stack.n_si_layers, margin=margin, die_n=grid_n,
+        use_pallas=use_pallas)
+    peaks = np.asarray(peaks)
+    mins = np.asarray(mins)
+
+    out: dict = {"design_points": dps, "interval_s": interval_dt,
+                 "t_end": t_end}
+    for i, label in enumerate(labels):
+        w, machine = label.split("/")
+        out.setdefault(w, {})[machine] = CosimReport(
+            label=label, interval_s=interval_dt,
+            peak_C=peaks[i], min_C=mins[i])
+    return out

@@ -39,6 +39,25 @@ from repro.core import bitplane as bp
 from repro.core.bitplane import Field, FieldAllocator
 
 
+def bin_energy_trace(cycles: np.ndarray, energy: np.ndarray,
+                     total_cycles: int, n_intervals: int
+                     ) -> tuple[float, np.ndarray]:
+    """Bin (cycle, energy) events into equal windows over [0, total_cycles].
+
+    ``cycles`` holds 1-based completion cycles.  Energy-conserving: the
+    returned bins sum to ``energy.sum()`` exactly.  Shared by
+    :meth:`APEngine.power_trace` and ``cosim.trace_from_counters``.
+    """
+    interval = max(int(total_cycles), 1) / n_intervals
+    bins = np.zeros(n_intervals, np.float64)
+    cycles = np.asarray(cycles, np.int64)
+    if cycles.size:
+        idx = np.minimum(((cycles - 1) / interval).astype(np.int64),
+                         n_intervals - 1)
+        np.add.at(bins, idx, np.asarray(energy, np.float64))
+    return interval, bins
+
+
 @dataclasses.dataclass(frozen=True)
 class PowerParams:
     """Table 3 of the paper (normalized to SRAM-cell write power = 1)."""
@@ -157,6 +176,10 @@ class APEngine:
         self.read_cycles = 0
         self.energy = 0.0             # normalized (SRAM write = 1)
         self.events = {"match": 0, "mismatch": 0, "write": 0, "miswrite": 0}
+        # power trace: per accounted event, the cycle it completed on and its
+        # energy (exact same accounting as `energy` — binned by cosim.py)
+        self._trace_cycles: list = []     # ints or int64 arrays
+        self._trace_energy: list = []     # floats or float64 arrays
 
     def counters(self) -> dict:
         out = dict(cycles=self.cycles, compare_cycles=self.compare_cycles,
@@ -262,8 +285,12 @@ class APEngine:
             kw = sched.kw.astype(np.float64)
             mf = m.astype(np.float64)
             pw = self.power
-            self.energy += float(np.sum(kc * (pw.p_m * mf + pw.p_mm * (n - mf))))
-            self.energy += float(np.sum(kw * (pw.p_w * mf + pw.p_mw * (n - mf))))
+            e_pass = kc * (pw.p_m * mf + pw.p_mm * (n - mf)) \
+                + kw * (pw.p_w * mf + pw.p_mw * (n - mf))
+            self.energy += float(e_pass.sum())
+            self._trace_cycles.append(
+                self.cycles - 2 * P + 2 * np.arange(1, P + 1, dtype=np.int64))
+            self._trace_energy.append(e_pass)
             self.events["match"] += int(m.sum())
             self.events["mismatch"] += int(P) * n - int(m.sum())
             self.events["write"] += int((kw * mf).sum())
@@ -273,16 +300,48 @@ class APEngine:
     def _account_compare(self, k: int, matched: int) -> None:
         n = self.n_words
         pw = self.power
-        self.energy += k * (pw.p_m * matched + pw.p_mm * (n - matched))
+        e = k * (pw.p_m * matched + pw.p_mm * (n - matched))
+        self.energy += e
+        self._trace_cycles.append(self.cycles)
+        self._trace_energy.append(e)
         self.events["match"] += matched
         self.events["mismatch"] += n - matched
 
     def _account_write(self, k: int, matched: int) -> None:
         n = self.n_words
         pw = self.power
-        self.energy += k * (pw.p_w * matched + pw.p_mw * (n - matched))
+        e = k * (pw.p_w * matched + pw.p_mw * (n - matched))
+        self.energy += e
+        self._trace_cycles.append(self.cycles)
+        self._trace_energy.append(e)
         self.events["write"] += k * matched
         self.events["miswrite"] += k * (n - matched)
+
+    # ------------------------------------------------------ power trace
+    def trace_events(self) -> tuple[np.ndarray, np.ndarray]:
+        """All accounted energy events so far: (cycle, energy) arrays.
+
+        ``cycle`` is the 1-based cycle each event completed on; ``energy``
+        is normalized (SRAM write = 1) and sums exactly to ``self.energy``.
+        Cycle spans with no events (host loads, sequential reads) simply
+        contribute zero-energy intervals when binned.
+        """
+        if not self._trace_cycles:
+            return (np.zeros(0, np.int64), np.zeros(0, np.float64))
+        cyc = np.concatenate([np.atleast_1d(np.asarray(c, np.int64))
+                              for c in self._trace_cycles])
+        e = np.concatenate([np.atleast_1d(np.asarray(v, np.float64))
+                            for v in self._trace_energy])
+        return cyc, e
+
+    def power_trace(self, n_intervals: int) -> tuple[float, np.ndarray]:
+        """Bin the event trace into ``n_intervals`` equal cycle windows.
+
+        Returns (interval_cycles, energy_per_interval[n_intervals]); the
+        bins cover [0, self.cycles] and conserve total energy exactly.
+        """
+        cyc, e = self.trace_events()
+        return bin_energy_trace(cyc, e, self.cycles, n_intervals)
 
     # ------------------------------------------------------ reporting
     def energy_uJ(self) -> float:

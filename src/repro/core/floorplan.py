@@ -48,6 +48,10 @@ class APFloorplan:
     def blocks_per_edge(self) -> int:
         return self.banks * self.blocks  # 64
 
+    def leakage_W(self) -> float:
+        """Static leakage of one layer (same gamma model as power_map)."""
+        return M.GAMMA_W_MM2 * self.die_w_mm ** 2
+
     def region_weights(self) -> dict:
         """Relative power densities (per normalized area unit)."""
         # per bit-cell area unit: eq-17 bracket is per PU (256-bit row) per cycle
@@ -70,7 +74,7 @@ class APFloorplan:
         a = self.region_areas()
         nb = self.blocks_per_edge ** 2
         dyn_total = sum(w[r] * a[r] for r in w) * nb
-        leak_W = M.GAMMA_W_MM2 * self.die_w_mm ** 2
+        leak_W = self.leakage_W()
         dyn_W = p_layer_W - leak_W
         region_W = {r: dyn_W * (w[r] * a[r] * nb / dyn_total) for r in w}
 
@@ -108,17 +112,16 @@ class SIMDFloorplan:
     n_cores: int = 12
     l1_frac_of_cache: float = 0.125   # L1s sit inside core tiles; L2 central
 
+    def leakage_W(self, dp: "M.DesignPoint") -> float:
+        """Static leakage of one layer (same gamma model as power_map)."""
+        return M.GAMMA_W_MM2 * dp.simd_area_mm2
+
     def power_map(self, grid_n: int, dp: "M.DesignPoint") -> np.ndarray:
         wl = M.WORKLOADS[dp.workload]
         n = dp.simd_n_pus
         # eq (14) decomposition (normalized -> watts)
-        f_run = (1.0 / n) / (1.0 / n + wl.i_s)     # fraction of time executing
-        p_exec_W = n * (M.P_PU_BIT * M.M_BITS ** 2
-                        + M.P_RF_BIT * M.K_WORDS * M.M_BITS) \
-            * f_run * M.P_SRAM_UW * 1e-6
-        p_sync_W = (wl.i_s * M.P_SYNC_BIT * M.M_BITS / (1.0 / n + wl.i_s)) \
-            * M.P_SRAM_UW * 1e-6
-        p_leak_W = M.GAMMA_W_MM2 * dp.simd_area_mm2
+        p_exec_W, p_sync_W, _ = M.simd_phase_powers(wl, n)
+        p_leak_W = self.leakage_W(dp)
 
         # geometry (fractions of die area)
         a_pu_mm2 = n * M.simd_pu_area() * M.A_SRAM_UM2 * 1e-6
@@ -183,7 +186,7 @@ def ap_block_zoom(fp: APFloorplan, p_layer_W: float, grid_n: int = 64,
     nb = fp.blocks_per_edge ** 2
     block_w_mm = fp.die_w_mm / fp.blocks_per_edge
     dyn_total = sum(w[r] * a[r] for r in w) * nb
-    leak_W = M.GAMMA_W_MM2 * fp.die_w_mm ** 2
+    leak_W = fp.leakage_W()
     dyn_W = p_layer_W - leak_W
     region_W = {r: dyn_W * (w[r] * a[r] / dyn_total) for r in w}   # per block
     leak_block = leak_W / nb

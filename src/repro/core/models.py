@@ -160,6 +160,23 @@ def simd_power_W(n_pus: float, wl: Workload, n_data: int = N_DATA) -> float:
     return dyn + leak
 
 
+def simd_phase_powers(wl: Workload, n_pus: float, m: int = M_BITS,
+                      k: int = K_WORDS) -> tuple[float, float, float]:
+    """Eq (14) split into its two phases: (p_exec_W, p_sync_W, f_run).
+
+    p_exec_W / p_sync_W are time-AVERAGED watts of the execute and
+    synchronize components; f_run = (1/n) / (1/n + I_s) is the fraction of
+    time spent executing.  Shared by the SIMD floorplan's spatial split and
+    the co-sim phase trace so both always use the same decomposition.
+    """
+    f_run = (1.0 / n_pus) / (1.0 / n_pus + wl.i_s)
+    p_exec_W = n_pus * (P_PU_BIT * m * m + P_RF_BIT * k * m) \
+        * f_run * P_SRAM_UW * 1e-6
+    p_sync_W = (wl.i_s * P_SYNC_BIT * m / (1.0 / n_pus + wl.i_s)) \
+        * P_SRAM_UW * 1e-6
+    return p_exec_W, p_sync_W, f_run
+
+
 # --------------------------------------------------------------------------
 # AP model — eqs (7)-(10), (15)-(17)
 # --------------------------------------------------------------------------

@@ -212,6 +212,20 @@ class Grid:
         c[-1] = p.c_cu * self.cell_area * p.t_spreader
         return jnp.asarray(c, jnp.float32)
 
+    def capacity_field(self) -> jax.Array:
+        """Per-cell heat capacity [J/K] over the full domain, [L, NY, NX].
+
+        Void cells (silicon layers over the margin ring) keep the silicon
+        value: they have zero conductance and zero power, so they simply
+        stay at their initial temperature; a nonzero capacity keeps the
+        implicit system's diagonal well conditioned.
+        """
+        c = np.asarray(self.capacities())
+        return jnp.asarray(
+            np.broadcast_to(c[:, None, None],
+                            (self.params.n_layers, self.dom_ny, self.dom_nx)),
+            jnp.float32)
+
     def pad_power(self, power) -> jax.Array:
         """[n_si, ny, nx] silicon power -> [L, ny, nx] (spreader heatless)."""
         power = jnp.asarray(power, jnp.float32)
@@ -271,12 +285,18 @@ def _diag(shape, g_lat, g_vert, g_pkg):
     return d
 
 
-@partial(jax.jit, static_argnames=("max_iter",))
-def _cg_solve(b, diag, g_lat, g_vert, g_pkg, tol=1e-8, max_iter=6000):
-    """Jacobi-preconditioned conjugate gradient for G T = b."""
-    A = lambda v: apply_operator(v, g_lat, g_vert, g_pkg)
-    Minv = 1.0 / diag
+# ---------------------------------------------------------------------------
+# generic preconditioned CG (shared by every solver in this repo: the jnp and
+# Pallas steady-state paths, and the implicit transient steppers below)
+# ---------------------------------------------------------------------------
 
+def pcg(A, Minv, b, tol=1e-8, max_iter=6000):
+    """Jacobi/diagonal-preconditioned CG for the SPD system A x = b.
+
+    ``A`` is a matvec closure, ``Minv`` the inverse diagonal (array).
+    Tolerance-based ``while_loop`` termination; see :func:`pcg_fixed` for the
+    fixed-cost variant used inside vmapped/scanned transient stepping.
+    """
     x = jnp.zeros_like(b)
     r = b
     z = Minv * r
@@ -302,6 +322,45 @@ def _cg_solve(b, diag, g_lat, g_vert, g_pkg, tol=1e-8, max_iter=6000):
 
     x, r, *_ = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
     return x
+
+
+def pcg_fixed(A, Minv, b, n_iter: int):
+    """PCG with a fixed iteration count (``fori_loop``).
+
+    Uniform cost per call, so a batch of solves vmaps without masking and a
+    scan over time steps stays one compiled program.  Guarded against a zero
+    right-hand side (alpha would be 0/0): the update is suppressed when the
+    residual has already vanished.
+    """
+    x = jnp.zeros_like(b)
+    r = b
+    z = Minv * r
+    p = z
+    rz = jnp.vdot(r, z)
+
+    def body(_, state):
+        x, r, p, rz = state
+        Ap = A(p)
+        pAp = jnp.vdot(p, Ap)
+        ok = pAp > 0.0
+        alpha = jnp.where(ok, rz / jnp.where(ok, pAp, 1.0), 0.0)
+        x = x + alpha * p
+        r = r - alpha * Ap
+        z = Minv * r
+        rz_new = jnp.vdot(r, z)
+        beta = jnp.where(ok, rz_new / jnp.where(rz > 0, rz, 1.0), 0.0)
+        p = z + beta * p
+        return x, r, p, rz_new
+
+    x, *_ = jax.lax.fori_loop(0, n_iter, body, (x, r, p, rz))
+    return x
+
+
+@partial(jax.jit, static_argnames=("max_iter",))
+def _cg_solve(b, diag, g_lat, g_vert, g_pkg, tol=1e-8, max_iter=6000):
+    """Jacobi-preconditioned conjugate gradient for G T = b."""
+    A = lambda v: apply_operator(v, g_lat, g_vert, g_pkg)
+    return pcg(A, 1.0 / diag, b, tol, max_iter)
 
 
 # ---------------------------------------------------------------------------
@@ -331,33 +390,7 @@ def _diag_fields(F: dict) -> jax.Array:
 @partial(jax.jit, static_argnames=("max_iter",))
 def _cg_solve_fields(b, F, tol=1e-8, max_iter=8000):
     A = lambda v: apply_operator_fields(v, F)
-    Minv = 1.0 / _diag_fields(F)
-
-    x = jnp.zeros_like(b)
-    r = b
-    z = Minv * r
-    p = z
-    rz = jnp.vdot(r, z)
-    bnorm = jnp.linalg.norm(b)
-
-    def cond(state):
-        x, r, p, rz, it = state
-        return (jnp.linalg.norm(r) > tol * bnorm) & (it < max_iter)
-
-    def body(state):
-        x, r, p, rz, it = state
-        Ap = A(p)
-        alpha = rz / jnp.vdot(p, Ap)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        z = Minv * r
-        rz_new = jnp.vdot(r, z)
-        beta = rz_new / rz
-        p = z + beta * p
-        return x, r, p, rz_new, it + 1
-
-    x, r, *_ = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
-    return x
+    return pcg(A, 1.0 / _diag_fields(F), b, tol, max_iter)
 
 
 def steady_state(power: np.ndarray | jax.Array, grid: Grid,
@@ -405,10 +438,90 @@ def transient_solve(power, grid: Grid, t_end: float,
     g = grid.conductances()
     cap = grid.capacities()
     power = grid.pad_power(power)
-    gmax = float(4 * jnp.max(g["g_lat"]) + 2 * jnp.max(g["g_vert"])
-                 + g["g_pkg"])
-    dt = 0.5 * float(jnp.min(cap)) / gmax
+    dt = explicit_dt(grid)
     n = max(int(t_end / dt), 1)
     T0 = jnp.full(power.shape, t_amb, jnp.float32)
     return transient(T0, power, g["g_lat"], g["g_vert"], g["g_pkg"],
                      cap, dt, n, t_amb)
+
+
+def explicit_dt(grid: Grid) -> float:
+    """The explicit scheme's stability-bound time step (0.5x CFL margin)."""
+    g = grid.conductances()
+    cap = grid.capacities()
+    gmax = float(4 * jnp.max(g["g_lat"]) + 2 * jnp.max(g["g_vert"])
+                 + g["g_pkg"])
+    return 0.5 * float(jnp.min(cap)) / gmax
+
+
+# ---------------------------------------------------------------------------
+# implicit (theta-scheme) transient: unconditionally stable, so the step size
+# is set by accuracy, not the explicit CFL bound — the co-simulation engine's
+# stepper (cosim.py replays per-interval power traces through it)
+# ---------------------------------------------------------------------------
+
+def _implicit_scan(dT0, power, A, Minv_lhs, cap3, dt, theta, n_steps: int,
+                   n_cg: int):
+    """theta-scheme steps in excess-temperature space  C dT/dt = P - G dT.
+
+    Solves for the increment:  (C/dt + theta G) delta = P - G dT_n,  then
+    dT_{n+1} = dT_n + delta  (exact for any theta; backward Euler theta=1,
+    Crank-Nicolson theta=0.5).  The LHS is SPD, solved by fixed-iteration
+    PCG so the whole integration is one scan — scannable and vmappable.
+    """
+    lhs = lambda v: cap3 / dt * v + theta * A(v)
+
+    def step(dTc, _):
+        rhs = power - A(dTc)
+        delta = pcg_fixed(lhs, Minv_lhs, rhs, n_cg)
+        # emit the PRE-step max, matching the explicit transient()'s peaks
+        return dTc + delta, jnp.max(dTc)
+
+    return jax.lax.scan(step, dT0, None, length=n_steps)
+
+
+@partial(jax.jit, static_argnames=("n_steps", "n_cg"))
+def transient_implicit(T0, power, g_lat, g_vert, g_pkg, cap, dt,
+                       n_steps: int, theta: float = 1.0,
+                       t_amb: float = AMBIENT_C, n_cg: int = 50):
+    """Implicit counterpart of :func:`transient` (same contract/returns)."""
+    L = T0.shape[0]
+    diag = _diag(T0.shape, g_lat, g_vert, g_pkg)
+    cap3 = jnp.broadcast_to(jnp.asarray(cap, jnp.float32), (L,))[:, None, None]
+    A = lambda v: apply_operator(v, g_lat, g_vert, g_pkg)
+    Minv = 1.0 / (cap3 / dt + theta * diag)
+    dT, peaks = _implicit_scan(T0 - t_amb, power, A, Minv, cap3, dt,
+                               theta, n_steps, n_cg)
+    return dT + t_amb, peaks + t_amb
+
+
+@partial(jax.jit, static_argnames=("n_steps", "n_cg"))
+def transient_implicit_fields(T0, power, F: dict, cap3, dt, n_steps: int,
+                              theta: float = 1.0, t_amb: float = AMBIENT_C,
+                              n_cg: int = 50):
+    """Implicit theta-scheme on the heterogeneous (production) operator.
+
+    T0/power: [L, NY, NX] over the full (die + margin) domain; cap3 the
+    per-cell capacity field (``Grid.capacity_field()``).
+    """
+    A = lambda v: apply_operator_fields(v, F)
+    Minv = 1.0 / (cap3 / dt + theta * _diag_fields(F))
+    dT, peaks = _implicit_scan(T0 - t_amb, power, A, Minv, cap3, dt,
+                               theta, n_steps, n_cg)
+    return dT + t_amb, peaks + t_amb
+
+
+def transient_solve_implicit(power, grid: Grid, t_end: float,
+                             n_steps: int, theta: float = 1.0,
+                             t_amb: float = AMBIENT_C, n_cg: int = 50
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Implicit counterpart of :func:`transient_solve` with a chosen step
+    count (the point: n_steps can be 10-1000x below the explicit bound)."""
+    g = grid.conductances()
+    cap = grid.capacities()
+    power = grid.pad_power(power)
+    dt = t_end / n_steps
+    T0 = jnp.full(power.shape, t_amb, jnp.float32)
+    return transient_implicit(T0, power, g["g_lat"], g["g_vert"],
+                              g["g_pkg"], cap, dt, n_steps, theta, t_amb,
+                              n_cg)

@@ -30,8 +30,9 @@ def run_schedule(planes: jax.Array, cmp_cols: jax.Array, cmp_key: jax.Array,
         sel = planes[cc]                                  # [Kc, n_lanes]
         keyb = (ck.astype(jnp.uint32) * FULL)[:, None]
         eq = ~(sel ^ keyb)
-        tag = jnp.bitwise_and.reduce(eq, axis=0) if hasattr(jnp.bitwise_and, "reduce") \
-            else _and_reduce(eq)
+        # NOT jnp.bitwise_and.reduce: its identity init np.array(-1, uint32)
+        # overflows under numpy>=2 (Kc is small, the unrolled AND is fine)
+        tag = _and_reduce(eq)
         matched = jax.lax.population_count(tag).astype(jnp.int32).sum()
         old = planes[wc]
         keyw = (wk.astype(jnp.uint32) * FULL)[:, None]

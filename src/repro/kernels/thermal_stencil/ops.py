@@ -41,36 +41,10 @@ def cg_solve_fields(b: jax.Array, F: dict, tol: float = 1e-8,
                     max_iter: int = 8000, block_y: int = 32,
                     interpret: bool = True) -> jax.Array:
     """Jacobi-preconditioned CG on the heterogeneous Pallas stencil."""
-    from repro.core.thermal import _diag_fields
+    from repro.core.thermal import _diag_fields, pcg
     A = lambda v: apply_operator_fields(v, F, block_y=block_y,
                                         interpret=interpret)
-    Minv = 1.0 / _diag_fields(F)
-
-    x = jnp.zeros_like(b)
-    r = b
-    z = Minv * r
-    p = z
-    rz = jnp.vdot(r, z)
-    bnorm = jnp.linalg.norm(b)
-
-    def cond(state):
-        x, r, p, rz, it = state
-        return (jnp.linalg.norm(r) > tol * bnorm) & (it < max_iter)
-
-    def body(state):
-        x, r, p, rz, it = state
-        Ap = A(p)
-        alpha = rz / jnp.vdot(p, Ap)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        z = Minv * r
-        rz_new = jnp.vdot(r, z)
-        beta = rz_new / rz
-        p = z + beta * p
-        return x, r, p, rz_new, it + 1
-
-    x, r, *_ = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
-    return x
+    return pcg(A, 1.0 / _diag_fields(F), b, tol, max_iter)
 
 
 @functools.partial(jax.jit, static_argnames=("max_iter", "block_y",
@@ -79,35 +53,12 @@ def cg_solve(b: jax.Array, diag: jax.Array, g_lat, g_vert, g_pkg,
              tol: float = 1e-8, max_iter: int = 6000,
              block_y: int = 32, interpret: bool = True) -> jax.Array:
     """Jacobi-preconditioned CG for G T = b with the Pallas stencil."""
+    from repro.core.thermal import pcg
     L = b.shape[0]
     g_lat, gv_u, gv_d, g_pkg_vec = _vectors(L, g_lat, g_vert, g_pkg)
     A = lambda v: _kernel.apply_operator_kernel(
         v, g_lat, gv_u, gv_d, g_pkg_vec, block_y=block_y,
         interpret=interpret)
-    Minv = 1.0 / diag
+    return pcg(A, 1.0 / diag, b, tol, max_iter)
 
-    x = jnp.zeros_like(b)
-    r = b
-    z = Minv * r
-    p = z
-    rz = jnp.vdot(r, z)
-    bnorm = jnp.linalg.norm(b)
 
-    def cond(state):
-        x, r, p, rz, it = state
-        return (jnp.linalg.norm(r) > tol * bnorm) & (it < max_iter)
-
-    def body(state):
-        x, r, p, rz, it = state
-        Ap = A(p)
-        alpha = rz / jnp.vdot(p, Ap)
-        x = x + alpha * p
-        r = r - alpha * Ap
-        z = Minv * r
-        rz_new = jnp.vdot(r, z)
-        beta = rz_new / rz
-        p = z + beta * p
-        return x, r, p, rz_new, it + 1
-
-    x, r, *_ = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
-    return x

@@ -211,6 +211,7 @@ def ap_blackscholes(S, K, T, sigma, r: float = 0.05,
 
     prices = _unq(eng.read(f.t1)[:n])
     counters = eng.counters()
+    counters["trace_cycles"], counters["trace_energy"] = eng.trace_events()
     counters["n"] = n
     return prices, counters
 

@@ -67,6 +67,7 @@ def ap_matmul(A: np.ndarray, B: np.ndarray, m: int = 8,
 
     C = eng.read(acc)[: n * n].reshape(n, n)
     counters = eng.counters()
+    counters["trace_cycles"], counters["trace_energy"] = eng.trace_events()
     counters["mac_cycles"] = mac_cycles
     counters["n"] = n
     counters["m"] = m

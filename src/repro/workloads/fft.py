@@ -194,6 +194,7 @@ def ap_fft(x: np.ndarray, m: int = 16, frac: int = 12,
     re = _from_fixed(eng.read(plan.re)[:n], frac, m)
     im = _from_fixed(eng.read(plan.im)[:n], frac, m)
     counters = eng.counters()
+    counters["trace_cycles"], counters["trace_energy"] = eng.trace_events()
     counters["n"] = n
     counters["m"] = m
     return re + 1j * im, counters

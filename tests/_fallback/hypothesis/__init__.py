@@ -1,0 +1,139 @@
+"""Minimal deterministic stand-in for `hypothesis` (activated by conftest.py
+ONLY when the real package is not installed — e.g. hermetic containers where
+pip is unavailable).  CI installs real hypothesis via pyproject's `test`
+extra and never sees this module.
+
+Scope: exactly the API surface this repo's property tests use —
+``@given`` with positional/keyword strategies, ``@settings(max_examples,
+deadline, ...)``, profile registration, and the strategies in
+``strategies.py``.  Examples are drawn from a PRNG seeded by the test's
+qualified name, so runs are reproducible (the fallback is always
+"derandomized"); there is no shrinking or example database.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+from . import strategies  # noqa: F401  (re-export: `from hypothesis import strategies`)
+
+__version__ = "0.0-fallback"
+__all__ = ["given", "settings", "assume", "note", "example", "HealthCheck",
+           "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class HealthCheck:
+    """Accepted-and-ignored placeholders for `suppress_health_check=`."""
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+    filter_too_much = "filter_too_much"
+    all = classmethod(lambda cls: [cls.too_slow, cls.data_too_large,
+                                   cls.filter_too_much])
+
+
+class _Unsatisfied(Exception):
+    pass
+
+
+def assume(condition) -> bool:
+    if not condition:
+        raise _Unsatisfied
+    return True
+
+
+def note(_msg) -> None:
+    pass
+
+
+def example(*_args, **_kwargs):
+    """@example is metadata for shrinking reports; a no-op pass-through."""
+    return lambda fn: fn
+
+
+class settings:
+    """Both the `@settings(...)` decorator and the profile registry."""
+
+    _profiles: dict[str, dict] = {"default": {}}
+    _active: dict = {}
+
+    def __init__(self, parent=None, **kwargs):
+        self.kwargs = dict(parent.kwargs) if isinstance(parent, settings) else {}
+        self.kwargs.update(kwargs)
+
+    def __call__(self, fn):
+        # applied above @given: annotate the wrapper; below: the raw test.
+        fn._fallback_settings = self
+        return fn
+
+    @property
+    def max_examples(self) -> int:
+        return self.kwargs.get(
+            "max_examples",
+            settings._active.get("max_examples", _DEFAULT_MAX_EXAMPLES))
+
+    @classmethod
+    def register_profile(cls, name: str, parent=None, **kwargs) -> None:
+        merged = dict(parent.kwargs) if isinstance(parent, settings) else {}
+        merged.update(kwargs)
+        cls._profiles[name] = merged
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._active = dict(cls._profiles.get(name, {}))
+
+    @classmethod
+    def get_profile(cls, name: str) -> "settings":
+        return settings(**cls._profiles.get(name, {}))
+
+
+def given(*pos_strategies, **kw_strategies):
+    """Run the test for N deterministic examples drawn from the strategies.
+
+    Positional strategies bind to the test's parameters in declaration
+    order (skipping names claimed by keyword strategies); any remaining
+    parameters stay visible to pytest as fixtures.
+    """
+
+    def decorate(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        pos_names = [n for n in names if n not in kw_strategies]
+        pos_names = pos_names[: len(pos_strategies)]
+        if len(pos_names) < len(pos_strategies):
+            raise TypeError(f"too many positional strategies for {fn.__name__}")
+        supplied = set(pos_names) | set(kw_strategies)
+        missing = supplied - set(names)
+        if missing:
+            raise TypeError(f"{fn.__name__} has no parameters {missing}")
+        binds = list(zip(pos_names, pos_strategies)) + list(kw_strategies.items())
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None) \
+                or getattr(fn, "_fallback_settings", None)
+            n = cfg.max_examples if cfg is not None else settings().max_examples
+            rng = np.random.default_rng(zlib.crc32(fn.__qualname__.encode()))
+            ran = 0
+            for _ in range(max(4 * n, n + 16)):
+                if ran >= n:
+                    break
+                drawn = {name: s.draw(rng) for name, s in binds}
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except _Unsatisfied:
+                    continue  # assume() rejected this example
+                ran += 1
+
+        # hide strategy-supplied parameters from pytest's fixture resolution
+        rest = [p for n, p in sig.parameters.items() if n not in supplied]
+        wrapper.__signature__ = sig.replace(parameters=rest)
+        del wrapper.__wrapped__
+        wrapper.hypothesis = type("Meta", (), {"inner_test": fn})()
+        return wrapper
+
+    return decorate

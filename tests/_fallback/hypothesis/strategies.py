@@ -1,0 +1,81 @@
+"""Strategies for the fallback `hypothesis` shim (see __init__.py).
+
+Each strategy is just a draw(rng) callable plus the combinators the repo's
+tests use.  Draws are uniform — no bias toward boundary values — which is
+weaker than real hypothesis but sufficient for deterministic CI-less runs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class SearchStrategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, f) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: f(self.draw(rng)))
+
+    def filter(self, pred) -> "SearchStrategy":
+        def draw(rng):
+            for _ in range(1000):
+                v = self.draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter() rejected 1000 consecutive draws")
+        return SearchStrategy(draw)
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    lo, hi = int(min_value), int(max_value)
+    # rng.integers caps at int64; draw wide ranges via python-int arithmetic
+    span = hi - lo
+    if span < (1 << 62):
+        return SearchStrategy(lambda rng: lo + int(rng.integers(0, span + 1)))
+    return SearchStrategy(
+        lambda rng: lo + (int(rng.integers(0, 1 << 31)) << 31
+                          | int(rng.integers(0, 1 << 31))) % (span + 1))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    if not elements:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return SearchStrategy(lambda rng: elements[int(rng.integers(0, len(elements)))])
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           allow_nan: bool = False, allow_infinity: bool = False,
+           width: int = 64) -> SearchStrategy:
+    lo, hi = float(min_value), float(max_value)
+    return SearchStrategy(lambda rng: float(rng.uniform(lo, hi)))
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements.draw(rng) for _ in range(n)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def just(value) -> SearchStrategy:
+    return SearchStrategy(lambda rng: value)
+
+
+def one_of(*strategies: SearchStrategy) -> SearchStrategy:
+    if len(strategies) == 1 and isinstance(strategies[0], (list, tuple)):
+        strategies = tuple(strategies[0])
+    return SearchStrategy(
+        lambda rng: strategies[int(rng.integers(0, len(strategies)))].draw(rng))

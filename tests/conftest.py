@@ -1,0 +1,42 @@
+"""Test-session config: hypothesis availability + profiles, marker wiring.
+
+Two concerns live here:
+
+1. **Hypothesis bootstrap.**  Property tests import `hypothesis` directly.
+   When the real package is installed (CI: `pip install -e '.[test]'`) it is
+   used untouched.  In hermetic environments without it, `tests/_fallback`
+   provides a small deterministic shim so the suite still collects and runs
+   (see its docstring for scope).
+
+2. **Deterministic CI profile.**  `HYPOTHESIS_PROFILE=ci` (set by the CI
+   workflow) fixes derandomization and disables deadlines so property tests
+   cannot flake under loaded shared runners.
+"""
+import os
+import sys
+
+_FALLBACK = os.path.join(os.path.dirname(__file__), "_fallback")
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    sys.path.insert(0, _FALLBACK)
+    import hypothesis  # noqa: F401
+
+from hypothesis import settings  # noqa: E402
+
+settings.register_profile("dev", deadline=None)
+settings.register_profile("ci", deadline=None, derandomize=True,
+                          max_examples=25, print_blob=True)
+settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+
+
+def pytest_collection_modifyitems(config, items):
+    """Auto-mark kernel-exercising tests `pallas` so CI lanes can select."""
+    import pytest
+
+    pallas_mark = pytest.mark.pallas
+    for item in items:
+        mod = item.module.__name__ if item.module else ""
+        if mod.startswith("test_kernel_"):
+            item.add_marker(pallas_mark)
