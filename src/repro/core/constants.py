@@ -1,0 +1,13 @@
+"""Shared thermal constants (single source of truth).
+
+``AMBIENT_C`` and the 85 °C 3D-DRAM ceiling used to be defined
+independently in ``core/thermal.py`` and ``core/cosim.py``; every module
+(including the ``repro.stack`` subsystem) now imports them from here so a
+calibration change cannot de-synchronize the solvers from the reports.
+"""
+
+AMBIENT_C = 45.0        # HotSpot default ambient [C]
+
+DRAM_LIMIT_C = 85.0     # §4.3: max operating temperature of commercial
+#   DRAM.  Also the first JEDEC refresh derating bin: above this the
+#   refresh interval halves (see repro.stack.dram.refresh_multiplier).

@@ -42,9 +42,8 @@ import numpy as np
 
 from repro.core import models as M
 from repro.core import thermal
+from repro.core.constants import DRAM_LIMIT_C
 from repro.core.floorplan import MM, APFloorplan, SIMDFloorplan
-
-DRAM_LIMIT_C = 85.0
 
 
 # ---------------------------------------------------------------------------
@@ -142,18 +141,21 @@ def power_frames(trace: PowerTrace, pmap: np.ndarray, leak_W: float,
     ``pmap`` is a floorplan layer map (leakage included, as produced by
     ``*Floorplan.power_map``); leakage stays constant per interval while
     the dynamic remainder is modulated by the trace activity.  Every
-    silicon layer carries the same map (the §4 convention), the spreader
-    layer and margin ring get zero.
+    LOGIC layer carries the same map (the §4 convention); DRAM layers of
+    a heterogeneous spec, the spreader layer, and the margin ring get
+    zero (DRAM power needs its own model —
+    ``repro.stack.feedback.stack_power_inputs``).
     """
     grid_n = pmap.shape[0]
     leak_map = np.full_like(pmap, leak_W / pmap.size)
     dyn_map = pmap - leak_map
     frames_2d = leak_map[None] + trace.activity[:, None, None] * dyn_map[None]
     T = trace.n_intervals
-    L, n_si = grid.params.n_layers, grid.params.n_si_layers
+    L = grid.n_layers
     m = grid.margin
     out = np.zeros((T, L, grid.dom_ny, grid.dom_nx), np.float32)
-    out[:, :n_si, m:m + grid_n, m:m + grid_n] = frames_2d[:, None]
+    for l in grid.stack.logic_layers:
+        out[:, l, m:m + grid_n, m:m + grid_n] = frames_2d
     return out
 
 

@@ -155,10 +155,18 @@ class SIMDFloorplan:
                 l1_cells += (y1 - y0) * (l1_x[1] - l1_x[0])
         l2_cells = grid_n * grid_n - pu_cells - l1_cells
 
-        pmap[dens == 1.0] = p_exec_W / max(pu_cells, 1)
-        # sync traffic: half in L1s, half in L2
-        pmap[dens == 2.0] = 0.5 * p_sync_W / max(l1_cells, 1)
-        pmap[dens == 0.0] = 0.5 * p_sync_W / max(l2_cells, 1)
+        if pu_cells == 0 or l2_cells == 0:
+            # grid too coarse to rasterize the tile columns AND a central
+            # band: uniform map keeps total wattage conserved
+            total_W = p_exec_W + p_sync_W + p_leak_W
+            return np.full((grid_n, grid_n), total_W / grid_n ** 2)
+        pmap[dens == 1.0] = p_exec_W / pu_cells
+        # sync traffic: half in L1s, half in L2 — when the grid is too
+        # coarse to rasterize any L1 cells, their share falls through to
+        # L2 so total wattage is conserved at every resolution
+        sync_l1_W = 0.5 * p_sync_W if l1_cells else 0.0
+        pmap[dens == 2.0] = sync_l1_W / max(l1_cells, 1)
+        pmap[dens == 0.0] = (p_sync_W - sync_l1_W) / l2_cells
         pmap += p_leak_W / grid_n ** 2
         return pmap
 
@@ -180,7 +188,7 @@ def ap_block_zoom(fp: APFloorplan, p_layer_W: float, grid_n: int = 64,
     """
     from repro.core import thermal
 
-    stack = stack or thermal.PAPER_STACK
+    spec = _as_spec(stack)
     w = fp.region_weights()
     a = fp.region_areas()
     nb = fp.blocks_per_edge ** 2
@@ -207,11 +215,11 @@ def ap_block_zoom(fp: APFloorplan, p_layer_W: float, grid_n: int = 64,
         / (tag_cols * (grid_n - reg_rows))
     pmap += leak_block / grid_n ** 2
 
-    L = stack.n_si_layers
-    power = np.broadcast_to(pmap, (L, *pmap.shape)).copy()
     grid = thermal.Grid(die_w=block_w_mm * MM, ny=grid_n, nx=grid_n,
-                        params=stack,
+                        spec=spec,
                         pkg_area=(fp.die_w_mm * MM) ** 2)
+    L = grid.n_die_layers
+    power = _logic_power(pmap, spec)
     T = np.asarray(thermal.steady_state(power, grid))
     return {"T": T, "power_map": pmap,
             "peak_C": [float(T[l].max()) for l in range(L)],
@@ -223,6 +231,25 @@ def ap_block_zoom(fp: APFloorplan, p_layer_W: float, grid_n: int = 64,
 # paper §4 comparison driver
 # ---------------------------------------------------------------------------
 
+def _as_spec(stack):
+    """Accept a StackSpec, a legacy StackParams, or None (paper default)."""
+    from repro.stack.spec import StackSpec, spec_from_params
+
+    if stack is None:
+        from repro.core import thermal
+        stack = thermal.PAPER_STACK
+    return stack if isinstance(stack, StackSpec) else spec_from_params(stack)
+
+
+def _logic_power(pmap: np.ndarray, spec) -> np.ndarray:
+    """[n_die, ny, nx] power with ``pmap`` on every LOGIC layer (the §4
+    convention) and zeros on DRAM layers."""
+    power = np.zeros((spec.n_die_layers, *pmap.shape), pmap.dtype)
+    for l in spec.logic_layers:
+        power[l] = pmap
+    return power
+
+
 def t_cut(T: np.ndarray) -> np.ndarray:
     """Horizontal center-line profile of one layer (paper Fig 13 'T-Cut')."""
     return np.asarray(T)[T.shape[0] // 2, :]
@@ -231,10 +258,12 @@ def t_cut(T: np.ndarray) -> np.ndarray:
 def thermal_comparison(grid_ap: int = 64, grid_simd: int = 64,
                        workload: str = "dmm", use_pallas: bool = False,
                        stack=None) -> dict:
-    """Run the full §4 experiment: same-performance AP vs SIMD, 4-layer stacks."""
+    """Run the full §4 experiment: same-performance AP vs SIMD, 4-layer
+    stacks by default; pass a heterogeneous ``StackSpec`` (e.g.
+    ``repro.stack.spec.dram_on_logic``) to put unpowered DRAM dies on top."""
     from repro.core import thermal
 
-    stack = stack or thermal.PAPER_STACK
+    spec = _as_spec(stack)
     dp = M.paper_design_point(workload)
     ap_fp = APFloorplan(die_w_mm=math.sqrt(dp.ap_area_mm2))
     simd_fp = SIMDFloorplan(die_w_mm=math.sqrt(dp.simd_area_mm2))
@@ -247,10 +276,10 @@ def thermal_comparison(grid_ap: int = 64, grid_simd: int = 64,
             pmap = fp.power_map(grid_ap, p_layer)
         else:
             pmap = fp.power_map(grid_simd, dp)
-        L = stack.n_si_layers
-        power = np.broadcast_to(pmap, (L, *pmap.shape)).copy()
+        L = spec.n_die_layers
+        power = _logic_power(pmap, spec)
         grid = thermal.Grid(die_w=fp.die_w_mm * MM, ny=pmap.shape[0],
-                            nx=pmap.shape[1], params=stack,
+                            nx=pmap.shape[1], spec=spec,
                             margin=pmap.shape[0] // 4)
         T = np.asarray(thermal.steady_state(power, grid, use_pallas=use_pallas))
         results[name] = {

@@ -47,6 +47,14 @@ P_MISMATCH = 0.75         # p_mm
 GAMMA_W_MM2 = 5e-2        # leakage [W / mm^2]
 
 N_DATA = 2 ** 20          # workload data-set size (paper: N = 2^20)
+BYTES_PER_WORD = 4        # m = 32-bit data words
+
+# Canonical operational (arithmetic) intensities of the three kernels at
+# N = 2^20 [flop/word] — the Fig 4 ordering anchor (DESIGN.md §7.3).  Used
+# both to scale synchronization intensity (inversely, §3.1) and as the
+# compute-to-traffic ratio for the DRAM activate-power estimate
+# (:func:`mem_traffic_bytes_per_s`).
+ARITH_INTENSITY = {"dmm": 45.0, "fft": 10.0, "bs": 150.0}
 
 
 def _norm_area_to_mm2(a_norm: float) -> float:
@@ -83,7 +91,7 @@ def _calibrate() -> dict[str, Workload]:
     # I_s is inversely proportional to arithmetic intensity (§3.1).
     # DMM blocked in an L1-sized tile: AI ~ 45 flop/word-ish (reference);
     # FFT: AI ~ log2(N)/2 = 10; BS: AI ~ 150 (compute-dominated, ~no sync).
-    ai_dmm, ai_fft, ai_bs = 45.0, 10.0, 150.0
+    ai_dmm, ai_fft, ai_bs = (ARITH_INTENSITY[w] for w in ("dmm", "fft", "bs"))
     i_s_fft = i_s_dmm * ai_dmm / ai_fft
     i_s_bs = i_s_dmm * ai_dmm / ai_bs
 
@@ -310,6 +318,33 @@ def power_vs_area_curves(workload: str, areas_mm2: np.ndarray):
 AP_CYCLES_PER_FP32_MUL = 4400.0   # paper §2.2
 AP_CYCLES_PER_FP32_ADD = 1100.0   # ~8m + alignment overheads, model constant
 AP_CLOCK_HZ = 1e9                 # 1 GHz-class CAM cycle (paper-era assumption)
+
+
+def ap_flops_per_s(n_pus: int = N_DATA) -> float:
+    """Sustained MAC-rate of one AP in flop/s (every PU in parallel).
+
+    A MAC = one fp32 mul + one fp32 add = 5500 bit-serial cycles; all
+    ``n_pus`` rows advance together, so flop/s = 2 * n_pus * f / 5500.
+    """
+    macs_per_s = n_pus * AP_CLOCK_HZ \
+        / (AP_CYCLES_PER_FP32_MUL + AP_CYCLES_PER_FP32_ADD)
+    return 2.0 * macs_per_s
+
+
+def mem_traffic_bytes_per_s(workload: str, n_pus: int = N_DATA) -> float:
+    """Off-chip (DRAM) traffic estimate for a design point [bytes/s].
+
+    traffic = compute rate / arithmetic intensity: each AI flops of work
+    stream one m-bit word to or from memory (DESIGN.md §7.4).  Evaluated
+    at the AP's compute rate — the same-performance SIMD pair sustains the
+    same flop/s by construction, so ONE traffic figure drives the DRAM
+    activate power of both machines' stacks and the thermal comparison
+    stays apples-to-apples.
+    """
+    if workload not in ARITH_INTENSITY:
+        raise ValueError(f"unknown workload {workload!r}; expected one of "
+                         f"{sorted(ARITH_INTENSITY)}")
+    return ap_flops_per_s(n_pus) / ARITH_INTENSITY[workload] * BYTES_PER_WORD
 
 
 def ap_backend_estimate(total_flops: float, n_pus: int = N_DATA) -> dict:

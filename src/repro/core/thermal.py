@@ -22,89 +22,45 @@ Jacobi-preconditioned CG; the stencil application is the Pallas kernel
 ``kernels/thermal_stencil`` (the jnp implementation here is the oracle).
 Constants are ONE documented set used for both the AP and the SIMD dies
 (DESIGN.md §7.2) so the comparison is apples-to-apples, as in the paper.
+
+Heterogeneous stacks: every operator here is built from a declarative
+``repro.stack.spec.StackSpec`` (ordered dies + interfaces, spreader last).
+The legacy ``StackParams`` shorthand is converted through
+``spec_from_params`` — ``PAPER_STACK`` is now just the named spec
+``PAPER_SPEC`` and reproduces the pre-refactor numbers exactly; DRAM-on-
+logic stacks come from ``repro.stack.spec.dram_on_logic``.
 """
 from __future__ import annotations
 
 import dataclasses
-import math
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-AMBIENT_C = 45.0  # HotSpot default ambient (45 C)
+from repro.core.constants import AMBIENT_C
+from repro.stack.spec import (PAPER_SPEC, PAPER_STACK, StackParams,
+                              StackSpec, spec_from_params,
+                              spreading_resistance as _spreading_resistance)
 
-
-@dataclasses.dataclass(frozen=True)
-class StackParams:
-    """Geometry/material constants (one set for AP and SIMD)."""
-    n_si_layers: int = 4
-    t_si: float = 250e-6         # 3D die thickness [m] (2013-era stacking)
-    k_si: float = 110.0          # silicon W/(m K)
-    r_bond: float = 0.7e-6       # die-bond interface resistance [m^2 K / W]
-    t_tim: float = 12e-6
-    k_tim: float = 4.0
-    t_spreader: float = 1e-3
-    k_spreader: float = 400.0    # copper, resolved as a grid layer
-    spreader_w: float = 30e-3
-    t_sink: float = 6.9e-3
-    k_sink: float = 400.0
-    sink_w: float = 60e-3
-    r_convec: float = 0.14       # total sink->ambient convective R [K/W]
-    spread_beta: float = 1.0     # effective source growth through the
-    #   spreader annulus beyond the die edge (the grid models the spreader
-    #   only under the die footprint; heat keeps spreading laterally in the
-    #   30 mm copper plate — source edge grows by beta * t_spreader per
-    #   side before entering the sink; calibrated once, see DESIGN.md §7.2)
-    c_si: float = 1.75e6         # volumetric heat capacity [J/(m^3 K)]
-    c_cu: float = 3.45e6
-
-    @property
-    def n_layers(self) -> int:
-        return self.n_si_layers + 1          # + spreader layer
-
-
-PAPER_STACK = StackParams()
-
-
-# ---------------------------------------------------------------------------
-# package lump below the spreader: spreader->sink spreading + sink + convec
-# ---------------------------------------------------------------------------
-
-def _spreading_resistance(a_source: float, a_plate: float, t: float,
-                          k: float, h: float) -> float:
-    """Lee/Song/Au closed-form constriction/spreading resistance."""
-    r1 = math.sqrt(a_source / math.pi)
-    r2 = math.sqrt(a_plate / math.pi)
-    eps = r1 / r2
-    tau = t / r2
-    Bi = h * r2 / k
-    lam = math.pi + 1.0 / (math.sqrt(math.pi) * eps)
-    phi = (math.tanh(lam * tau) + lam / Bi) / (1.0 + lam / Bi * math.tanh(lam * tau))
-    psi = (eps * tau / math.sqrt(math.pi)
-           + (1.0 - eps) * phi / math.sqrt(math.pi))
-    return psi / (k * r1 * math.sqrt(math.pi))
+__all__ = [  # re-exports kept for callers of the pre-refactor module
+    "AMBIENT_C", "PAPER_SPEC", "PAPER_STACK", "StackParams", "StackSpec",
+    "spec_from_params", "Grid", "package_resistance", "steady_state",
+    "apply_operator", "apply_operator_fields", "pcg", "pcg_fixed",
+    "transient", "transient_solve", "explicit_dt", "transient_implicit",
+    "transient_implicit_fields", "transient_solve_implicit",
+]
 
 
 def package_resistance(die_area_m2: float, p: StackParams = PAPER_STACK
                        ) -> float:
     """Lumped R from the spreader underside to ambient [K/W].
 
-    The spreader plate itself is grid-resolved; its footprint under the die
-    feeds the sink through spreading in the sink base.
+    Thin compatibility wrapper over
+    :meth:`repro.stack.spec.StackSpec.package_resistance`.
     """
-    a_sink = p.sink_w ** 2
-    h_sink_eff = 1.0 / (p.r_convec * a_sink)
-    # effective source: the copper plate keeps spreading beyond the die
-    # edge (outside the grid-resolved footprint)
-    src_w = min(math.sqrt(die_area_m2) + 2 * p.spread_beta * p.t_spreader,
-                p.spreader_w)
-    a_src = src_w ** 2
-    r_sp = _spreading_resistance(a_src, a_sink, p.t_sink, p.k_sink,
-                                 h_sink_eff)
-    r_cond_sink = p.t_sink / (p.k_sink * a_sink)
-    return r_sp + r_cond_sink + p.r_convec
+    return spec_from_params(p).package_resistance(die_area_m2)
 
 
 # ---------------------------------------------------------------------------
@@ -124,6 +80,23 @@ class Grid:
     margin: int = 0             # extra spreader-only cells per side: the
     #   copper plate extends beyond the die, so die edges couple to cooler
     #   outer spreader — the source of the paper's ~3C center-to-edge span.
+    spec: StackSpec | None = None   # heterogeneous stack; None -> the
+    #   homogeneous ``params`` expanded through ``spec_from_params``.
+
+    @property
+    def stack(self) -> StackSpec:
+        """The StackSpec every operator on this grid is built from."""
+        return self.spec if self.spec is not None \
+            else spec_from_params(self.params)
+
+    @property
+    def n_layers(self) -> int:
+        return self.stack.n_layers
+
+    @property
+    def n_die_layers(self) -> int:
+        """Device layers (logic + DRAM) — everything above the spreader."""
+        return self.stack.n_die_layers
 
     @property
     def cell_w(self) -> float:
@@ -143,21 +116,12 @@ class Grid:
 
     def conductances(self) -> dict:
         """g_lat [L], g_vert [L-1] (interfaces, top->bottom), g_pkg scalar."""
-        p = self.params
-        L = p.n_layers
-        g_lat = np.full(L, p.k_si * p.t_si)
-        g_lat[-1] = p.k_spreader * p.t_spreader        # spreader layer
-        g_vert = np.empty(L - 1)
-        # Si|Si interfaces: half-Si + bond + half-Si
-        r_sisi = p.t_si / p.k_si + p.r_bond            # [m^2 K/W]
-        g_vert[: L - 2] = self.cell_area / r_sisi
-        # Si_1 | spreader through the TIM
-        r_tim = 0.5 * p.t_si / p.k_si + p.t_tim / p.k_tim \
-            + 0.5 * p.t_spreader / p.k_spreader
-        g_vert[L - 2] = self.cell_area / r_tim
+        s = self.stack
+        g_lat = s.lateral_conductances()
+        g_vert = s.vertical_conductances(self.cell_area)
         dom_area = self.dom_ny * self.dom_nx * self.cell_area
         a_pkg = self.pkg_area or dom_area
-        r_pkg = package_resistance(a_pkg, p)
+        r_pkg = s.package_resistance(a_pkg)
         # per-cell share: cell_area / (r_pkg * A) — reduces to
         # 1/(r_pkg * ncells) when the grid covers the package source area
         g_pkg = self.cell_area / (r_pkg * a_pkg)
@@ -168,17 +132,17 @@ class Grid:
     def fields(self) -> dict:
         """Per-face conductance fields over the (die + margin) domain.
 
-        Silicon layers exist only over the die footprint (faces outside it
-        are zero = adiabatic); the spreader layer spans the full domain.
-        Returns seven [L, NY, NX] arrays: gx_lf, gx_rt, gy_up, gy_dn
-        (lateral faces), gz_up, gz_dn (interfaces), g_pkg (bottom lump).
+        Die layers (logic and DRAM) exist only over the die footprint
+        (faces outside it are zero = adiabatic); the spreader layer spans
+        the full domain.  Returns seven [L, NY, NX] arrays: gx_lf, gx_rt,
+        gy_up, gy_dn (lateral faces), gz_up, gz_dn (interfaces), g_pkg
+        (bottom lump).
         """
         g = self.conductances()
-        p = self.params
-        L = p.n_layers
+        L = self.n_layers
         NY, NX, m = self.dom_ny, self.dom_nx, self.margin
         mask = np.zeros((L, NY, NX), np.float32)
-        mask[:-1, m:m + self.ny, m:m + self.nx] = 1.0   # silicon: die only
+        mask[:-1, m:m + self.ny, m:m + self.nx] = 1.0   # dies: footprint only
         mask[-1] = 1.0                                  # spreader: everywhere
         g_cell = np.asarray(g["g_lat"])[:, None, None] * mask
 
@@ -207,31 +171,29 @@ class Grid:
             gz_up=gz_up, gz_dn=gz_dn, g_pkg=g_pkg).items()}
 
     def capacities(self) -> jax.Array:
-        p = self.params
-        c = np.full(p.n_layers, p.c_si * self.cell_area * p.t_si)
-        c[-1] = p.c_cu * self.cell_area * p.t_spreader
-        return jnp.asarray(c, jnp.float32)
+        return jnp.asarray(self.stack.capacities(self.cell_area),
+                           jnp.float32)
 
     def capacity_field(self) -> jax.Array:
         """Per-cell heat capacity [J/K] over the full domain, [L, NY, NX].
 
-        Void cells (silicon layers over the margin ring) keep the silicon
-        value: they have zero conductance and zero power, so they simply
-        stay at their initial temperature; a nonzero capacity keeps the
-        implicit system's diagonal well conditioned.
+        Void cells (die layers over the margin ring) keep the die value:
+        they have zero conductance and zero power, so they simply stay at
+        their initial temperature; a nonzero capacity keeps the implicit
+        system's diagonal well conditioned.
         """
         c = np.asarray(self.capacities())
         return jnp.asarray(
             np.broadcast_to(c[:, None, None],
-                            (self.params.n_layers, self.dom_ny, self.dom_nx)),
+                            (self.n_layers, self.dom_ny, self.dom_nx)),
             jnp.float32)
 
     def pad_power(self, power) -> jax.Array:
-        """[n_si, ny, nx] silicon power -> [L, ny, nx] (spreader heatless)."""
+        """[n_die, ny, nx] die power -> [L, ny, nx] (spreader heatless)."""
         power = jnp.asarray(power, jnp.float32)
-        if power.shape[0] == self.params.n_layers:
+        if power.shape[0] == self.n_layers:
             return power
-        pad = jnp.zeros((self.params.n_layers - power.shape[0],) +
+        pad = jnp.zeros((self.n_layers - power.shape[0],) +
                         power.shape[1:], jnp.float32)
         return jnp.concatenate([power, pad], axis=0)
 
@@ -396,9 +358,9 @@ def _cg_solve_fields(b, F, tol=1e-8, max_iter=8000):
 def steady_state(power: np.ndarray | jax.Array, grid: Grid,
                  t_amb: float = AMBIENT_C, use_pallas: bool = False
                  ) -> jax.Array:
-    """Steady-state temperatures [C] of the SILICON layers over the DIE.
+    """Steady-state temperatures [C] of the DIE layers over the DIE.
 
-    power: [n_si_layers, ny, nx] watts per cell of the die footprint (the
+    power: [n_die_layers, ny, nx] watts per cell of the die footprint (the
     spreader layer and margin ring are handled internally and stripped).
     """
     F = grid.fields()
@@ -411,10 +373,10 @@ def steady_state(power: np.ndarray | jax.Array, grid: Grid,
         dT = _ops.cg_solve_fields(power, F)
     else:
         dT = _cg_solve_fields(power, F)
-    n_si = grid.params.n_si_layers
+    n_die = grid.n_die_layers
     if m:
-        return dT[:n_si, m:m + grid.ny, m:m + grid.nx] + t_amb
-    return dT[:n_si] + t_amb
+        return dT[:n_die, m:m + grid.ny, m:m + grid.nx] + t_amb
+    return dT[:n_die] + t_amb
 
 
 @partial(jax.jit, static_argnames=("n_steps",))

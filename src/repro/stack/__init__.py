@@ -1,0 +1,30 @@
+"""Heterogeneous 3D DRAM-on-logic stack subsystem.
+
+- :mod:`repro.stack.spec` — declarative :class:`StackSpec` of ordered
+  dies/interfaces; ``core/thermal.py`` builds its operators from a spec.
+- :mod:`repro.stack.dram` — DRAM die floorplan + power model (bank grid,
+  traffic-driven activate/IO, JEDEC temperature-binned refresh).
+- :mod:`repro.stack.feedback` — closed-loop replay coupling temperature
+  back into power (Picard-iterated refresh + leakage, DTM throttling).
+
+Only ``spec`` is imported eagerly: ``core/thermal.py`` depends on it, so
+pulling in ``feedback`` (which depends on ``thermal``) here would create
+an import cycle; ``dram``/``feedback`` load lazily on first attribute
+access (PEP 562).
+"""
+from repro.stack.spec import (DRAM, LOGIC, PAPER_SPEC, SPREADER, Interface,
+                              Layer, StackSpec, dram_on_logic,
+                              spec_from_params)
+
+__all__ = [
+    "DRAM", "LOGIC", "SPREADER", "PAPER_SPEC", "Interface", "Layer",
+    "StackSpec", "dram_on_logic", "spec_from_params", "spec", "dram",
+    "feedback",
+]
+
+
+def __getattr__(name):
+    if name in ("dram", "feedback", "spec"):
+        import importlib
+        return importlib.import_module(f"repro.stack.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -9,10 +9,8 @@ conservative in the direction that favors the paper's conclusion.
 import numpy as np
 import pytest
 
-from repro.core import models as M
+from repro.core.constants import DRAM_LIMIT_C  # §4.3 DRAM operating limit
 from repro.core.floorplan import thermal_comparison
-
-DRAM_LIMIT_C = 85.0     # §4.3: max operating temp of commercial DRAM
 
 
 @pytest.fixture(scope="module")
