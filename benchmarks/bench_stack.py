@@ -2,13 +2,12 @@
 claim ("AP's flat thermal profile makes DRAM-on-logic stacking viable")
 as a quantitative table.
 
-For every workload × DRAM-die-count the same-performance AP and SIMD
-stacks are replayed with temperature feedback (JEDEC refresh bins,
-exponential leakage, DTM throttling; ``repro.stack.feedback``), one
-vmapped batch per die count.  Reported per case: logic/DRAM peak
-temperature, DRAM span, refresh-power overhead (× the cool-DRAM 1×
-level), DTM-throttled runtime inflation, DRAM seconds above the 85 °C
-ceiling, and the final Picard residual.
+Declared as a `repro.sweep.SweepSpec` over workload × DRAM-die-count and
+lowered to one vmapped closed-loop batch per die count (the feedback
+path: JEDEC refresh bins, exponential leakage, DTM throttling).
+Reported per case: logic/DRAM peak temperature, DRAM span, refresh-power
+overhead (× the cool-DRAM 1× level), DTM-throttled runtime inflation,
+DRAM seconds above the 85 °C ceiling, and the final Picard residual.
 
 ``--quick`` shrinks grids/intervals/die counts for the CI smoke lane.
 """
@@ -17,6 +16,7 @@ import sys
 
 from repro.core.constants import DRAM_LIMIT_C
 from repro.stack import feedback
+from repro.sweep import SweepSpec, run_sweep
 
 WORKLOADS = ("dmm", "fft", "bs")
 
@@ -24,33 +24,34 @@ WORKLOADS = ("dmm", "fft", "bs")
 def sweep(dram_counts, grid_n: int, n_intervals: int, t_end: float,
           steps_per_interval: int, n_cg: int) -> None:
     fb = feedback.FeedbackParams()
+    spec = SweepSpec(workloads=WORKLOADS, sizes=(2 ** 20,),
+                     n_dram=tuple(dram_counts), fb_modes=("closed",),
+                     grid_n=grid_n, n_intervals=n_intervals, t_end=t_end,
+                     steps_per_interval=steps_per_interval, n_cg=n_cg)
     print(f"closed-loop stack sweep: grid {grid_n}, {n_intervals} intervals "
           f"over {t_end:.2f}s, Picard x{fb.n_picard} "
           f"(tol {fb.picard_tol_C:.2g}C), DTM trip {fb.dtm_trip_C:.0f}C")
+    res = run_sweep(spec, use_cache=False)
     print("workload,machine,n_dram,logic_peak_C,dram_peak_C,dram_span_C,"
           "refresh_overhead_x,dtm_slowdown_x,dram_above_85C_s,"
           "picard_residual_C")
+    for rec in res.records:
+        r = rec.report
+        p = rec.point
+        dram_span = r.span_C[:, list(r.spec.dram_layers)].max()
+        print(f"{p.workload},{rec.machine},{p.n_dram},"
+              f"{r.logic_peak_C.max():.1f},{r.dram_peak_C.max():.1f},"
+              f"{dram_span:.2f},{r.refresh_overhead:.3f},"
+              f"{r.dtm_slowdown:.3f},{r.dram_time_above_limit_s:.3f},"
+              f"{r.residual_C.max():.2g}")
+        assert r.converged, (rec.label, r.residual_C.max())
     for n_dram in dram_counts:
-        res = feedback.run_stack_cosim(
-            workloads=WORKLOADS, n_dram=n_dram, grid_n=grid_n,
-            n_intervals=n_intervals, t_end=t_end,
-            steps_per_interval=steps_per_interval, n_cg=n_cg, fb=fb)
         for w in WORKLOADS:
-            for machine in ("ap", "simd"):
-                r = res[w][machine]
-                dram_span = r.span_C[:, list(r.spec.dram_layers)].max()
-                print(f"{w},{machine},{n_dram},"
-                      f"{r.logic_peak_C.max():.1f},{r.dram_peak_C.max():.1f},"
-                      f"{dram_span:.2f},{r.refresh_overhead:.3f},"
-                      f"{r.dtm_slowdown:.3f},{r.dram_time_above_limit_s:.3f},"
-                      f"{r.residual_C.max():.2g}")
-                assert r.converged, (w, machine, n_dram, r.residual_C.max())
-        for w in WORKLOADS:
-            ap_ok = res[w]["ap"].dram_time_above_limit_s == 0.0
-            simd_ok = res[w]["simd"].dram_time_above_limit_s == 0.0
+            ok = {rec.machine: rec.verdict_ok for rec in res.records
+                  if rec.point.workload == w and rec.point.n_dram == n_dram}
             print(f"# {w} x{n_dram} DRAM ({DRAM_LIMIT_C:.0f}C ceiling): "
-                  f"AP {'OK' if ap_ok else 'BLOCKED'} / "
-                  f"SIMD {'OK' if simd_ok else 'BLOCKED'}")
+                  f"AP {'OK' if ok['ap'] else 'BLOCKED'} / "
+                  f"SIMD {'OK' if ok['simd'] else 'BLOCKED'}")
 
 
 def main(argv=None) -> None:

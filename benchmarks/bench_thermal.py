@@ -38,18 +38,22 @@ def cosim_section(grid_n: int, n_intervals: int, workloads) -> None:
 
     from repro.core import cosim, thermal
     from repro.core.floorplan import MM
+    from repro.sweep import SweepSpec, run_sweep
 
     print()
     print(f"transient co-simulation (grid {grid_n}, {n_intervals} intervals, "
           f"implicit theta-scheme)")
     t_end = 0.25
     steps_per_interval = 2
-    res = cosim.run_cosim(workloads=workloads, grid_n=grid_n,
-                          n_intervals=n_intervals, t_end=t_end,
-                          steps_per_interval=steps_per_interval)
+    # the bare 4-layer logic stack, open loop, as one declarative sweep
+    spec = SweepSpec(workloads=tuple(workloads), sizes=(2 ** 20,),
+                     n_dram=(0,), fb_modes=("open",), grid_n=grid_n,
+                     n_intervals=n_intervals, t_end=t_end,
+                     steps_per_interval=steps_per_interval)
+    res = run_sweep(spec, use_cache=False)
     # implicit step-count advantage vs the CFL-bound explicit oracle, on
     # the exact grids simulated (the AP and SIMD dies of the first workload)
-    dp = res["design_points"][workloads[0]]
+    dp = cosim.comparable_design_point(workloads[0])
     n_imp = n_intervals * steps_per_interval
     for machine, area in (("ap", dp.ap_area_mm2), ("simd", dp.simd_area_mm2)):
         grid = thermal.Grid(die_w=math.sqrt(area) * MM, ny=grid_n, nx=grid_n,
@@ -59,18 +63,19 @@ def cosim_section(grid_n: int, n_intervals: int, workloads) -> None:
               f"{n_exp}, implicit {n_imp} ({n_exp / n_imp:.0f}x fewer)")
     print("workload,machine,layer,peak_max_C,peak_final_C,span_max_C,"
           "time_above_85C_s")
+    for rec in res.records:
+        r = rec.report
+        above = r.time_above()
+        for l in range(r.peak_C.shape[1]):
+            print(f"{rec.point.workload},{rec.machine},{l},"
+                  f"{r.peak_C[:, l].max():.1f},{r.peak_C[-1, l]:.1f},"
+                  f"{r.span_C[:, l].max():.2f},{above[l]:.3f}")
     for w in workloads:
-        for machine in ("ap", "simd"):
-            r = res[w][machine]
-            above = r.time_above()
-            for l in range(r.peak_C.shape[1]):
-                print(f"{w},{machine},{l},{r.peak_C[:, l].max():.1f},"
-                      f"{r.peak_C[-1, l]:.1f},{r.span_C[:, l].max():.2f},"
-                      f"{above[l]:.3f}")
-        ap_above = float(res[w]["ap"].time_above().max())
-        simd_above = float(res[w]["simd"].time_above().max())
-        print(f"# {w}: AP above-85C {ap_above:.3f}s / "
-              f"SIMD above-85C {simd_above:.3f}s of {res['t_end']:.2f}s")
+        by_mc = {rec.machine: rec for rec in res.records
+                 if rec.point.workload == w}
+        print(f"# {w}: AP above-85C {by_mc['ap'].time_above_limit_s:.3f}s / "
+              f"SIMD above-85C {by_mc['simd'].time_above_limit_s:.3f}s "
+              f"of {t_end:.2f}s")
 
 
 def main():

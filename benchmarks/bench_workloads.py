@@ -1,8 +1,13 @@
-"""Paper §3.1 workloads executed on the AP emulator: cycles + accuracy."""
+"""The workload suite executed on the AP emulator: cycles + accuracy.
+
+Paper §3.1 trio (dmm / fft / blackscholes) plus the suite additions
+(sort / spmv / knn / histogram); every row is an exact small instance
+checked against its NumPy oracle.
+"""
 import numpy as np
 
 from repro.workloads import blackscholes as bs
-from repro.workloads import dmm, fft
+from repro.workloads import dmm, fft, histogram, knn, sort, spmv
 
 
 def main():
@@ -33,6 +38,33 @@ def main():
     err = float(np.abs(prices - bs.reference(S, K, T, sig)).max())
     print(f"blackscholes,{n},{ctr['cycles'] - ctr['read_cycles']},"
           f"{ctr['energy']:.3e},{err:.4f}")
+
+    xs = rng.integers(0, 200, 64, dtype=np.uint64)
+    ys, ctr = sort.ap_sort(xs, m=8)
+    err = float(np.abs(ys.astype(np.int64)
+                       - sort.reference(xs).astype(np.int64)).max())
+    print(f"sort,64,{ctr['cycles']},{ctr['energy']:.3e},{err}")
+
+    n_rows, nnz = 8, 24
+    r = rng.integers(0, n_rows, nnz)
+    c = rng.integers(0, n_rows, nnz)
+    v = rng.integers(0, 50, nnz, dtype=np.uint64)
+    xv = rng.integers(0, 50, n_rows, dtype=np.uint64)
+    y, ctr = spmv.ap_spmv(r, c, v, xv, n_rows, m=6)
+    err = float(np.abs(y - spmv.reference(r, c, v, xv, n_rows)).max())
+    print(f"spmv,{nnz}nnz,{ctr['cycles']},{ctr['energy']:.3e},{err}")
+
+    db = rng.integers(0, 16, (64, 4), dtype=np.uint64)
+    q = rng.integers(0, 16, 4, dtype=np.uint64)
+    idx, ctr = knn.ap_knn(db, q, k=5, m=4)
+    err = float(np.abs(idx - knn.reference(db, q, 5)).max())
+    print(f"knn,64x4,{ctr['cycles'] - ctr['read_cycles']},"
+          f"{ctr['energy']:.3e},{err}")
+
+    xs = rng.integers(0, 64, 128, dtype=np.uint64)
+    h, ctr = histogram.ap_histogram(xs, 8, m=6)
+    err = float(np.abs(h - histogram.reference(xs, 8, m=6)).max())
+    print(f"hist,128,{ctr['cycles']},{ctr['energy']:.3e},{err}")
 
 
 if __name__ == "__main__":

@@ -4,8 +4,8 @@ import sys
 import time
 
 from benchmarks import (bench_ap_backend, bench_cycles, bench_roofline,
-                        bench_speedup_power, bench_stack, bench_thermal,
-                        bench_workloads)
+                        bench_speedup_power, bench_stack, bench_sweep,
+                        bench_thermal, bench_workloads)
 
 SECTIONS = {
     "cycles": ("§2.2 cycle-count claims", bench_cycles.main),
@@ -18,6 +18,8 @@ SECTIONS = {
     "stack": ("abstract claim: AP+DRAM vs SIMD+DRAM closed-loop "
               "stacks (refresh/leakage/DTM feedback)",
               bench_stack.main),
+    "sweep": ("scenario sweep: workloads x sizes x stacks through the "
+              "cached vmapped path", bench_sweep.main),
     "roofline": ("§Roofline per-cell terms (dry-run artifacts)",
                  bench_roofline.main),
     "ap_backend": ("paper-technique x assigned archs (AP vs TPU)",

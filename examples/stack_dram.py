@@ -17,8 +17,10 @@ from repro.stack import feedback
 
 
 def main(argv=None):
+    from repro.workloads import registry
+
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", default="dmm", choices=("dmm", "fft", "bs"))
+    ap.add_argument("--workload", default="dmm", choices=registry.names())
     ap.add_argument("--dram", type=int, default=2)
     ap.add_argument("--grid", type=int, default=16)
     ap.add_argument("--intervals", type=int, default=32)

@@ -1,3 +1,6 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core of the reproduction: the exact bit-serial AP machine model
+(`bitplane`, `engine`, `isa`, `arith`, `apfloat`), the paper's analytic
+area/performance/power models (`models`), die floorplans (`floorplan`),
+the HotSpot-equivalent 3D RC thermal solver (`thermal`), the
+power-trace → transient co-simulation engine (`cosim`), and shared
+thermal constants (`constants`)."""

@@ -85,30 +85,25 @@ def trace_from_counters(counters: dict, n_intervals: int,
     return PowerTrace(bins / mean, source, total_cycles / M.AP_CLOCK_HZ)
 
 
-@functools.lru_cache(maxsize=None)
-def ap_workload_trace(workload: str, n_intervals: int = 64) -> PowerTrace:
-    """Run a small instance of the named AP workload and bin its measured
-    energy events.  Small instances keep the per-phase structure (MAC
-    sweeps, FFT stages, BS LUT passes) that sets the activity shape."""
-    from repro.workloads import blackscholes as bs
-    from repro.workloads import dmm, fft
+def trace_elems(size: int) -> int:
+    """Small-instance element count for a dataset size: sqrt(N) clamped
+    to [32, 256] — big enough to keep per-phase structure, small enough
+    that exact bit-serial emulation stays cheap.  The ONE sizing rule
+    shared by every driver (run_cosim, run_stack_cosim, repro.sweep) so
+    the same nominal scenario always replays the same trace."""
+    return int(min(max(math.sqrt(size), 32), 256))
 
-    rng = np.random.default_rng(0)
-    if workload == "dmm":
-        A = rng.integers(0, 64, (8, 8), dtype=np.uint64)
-        B = rng.integers(0, 64, (8, 8), dtype=np.uint64)
-        _, ctr = dmm.ap_matmul(A, B, m=6)
-    elif workload == "fft":
-        x = (rng.normal(size=16) + 1j * rng.normal(size=16)) * 0.1
-        _, ctr = fft.ap_fft(x, m=12, frac=9)
-    elif workload == "bs":
-        n = 32
-        _, ctr = bs.ap_blackscholes(rng.uniform(0.9, 1.4, n),
-                                    rng.uniform(0.9, 1.4, n),
-                                    rng.uniform(0.5, 1.5, n),
-                                    rng.uniform(0.2, 0.5, n))
-    else:
-        raise ValueError(f"unknown workload {workload!r}")
+
+@functools.lru_cache(maxsize=None)
+def ap_workload_trace(workload: str, n_intervals: int = 64,
+                      n_elems: int = 64) -> PowerTrace:
+    """Run a small instance of the named AP workload (any registry entry)
+    and bin its measured energy events.  Small instances keep the
+    per-phase structure (MAC sweeps, FFT stages, sort extractions) that
+    sets the activity shape; ``n_elems`` scales the instance."""
+    from repro.workloads import registry
+
+    ctr = registry.trace_counters(workload, n_elems)
     return trace_from_counters(ctr, n_intervals, source=f"ap:{workload}")
 
 
@@ -267,18 +262,21 @@ class CosimReport:
 # top-level driver: batched AP-vs-SIMD per-workload co-simulation
 # ---------------------------------------------------------------------------
 
-def comparable_design_point(workload: str) -> M.DesignPoint:
+def comparable_design_point(workload: str,
+                            n_ap_start: int = M.N_DATA) -> M.DesignPoint:
     """Largest same-performance AP/SIMD pair that exists for a workload.
 
     A SIMD can only match AP speedups below its synchronization ceiling
     1/I_s (eq 3).  For dmm/bs the paper's full-size AP (n = 2^20) is
-    comparable; for fft it is not, so the AP is halved until the
-    comparison point exists — same-performance remains the invariant.
+    comparable; for fft and the low-arithmetic-intensity suite workloads
+    it is not, so the AP is halved from ``n_ap_start`` (the dataset
+    size, paper sizing n_AP = N) until the comparison point exists —
+    same-performance remains the invariant.
     """
     if workload not in M.WORKLOADS:
         raise ValueError(f"unknown workload {workload!r}; expected one of "
                          f"{sorted(M.WORKLOADS)}")
-    n_ap = M.N_DATA
+    n_ap = n_ap_start
     while n_ap >= 1024:
         try:
             return M.paper_design_point(workload, n_ap)
@@ -312,7 +310,7 @@ def run_cosim(workloads=("dmm", "fft"), grid_n: int = 32,
         cases = (
             (f"{w}/ap", ap_fp.power_map(grid_n, dp.ap_power_W),
              ap_fp.leakage_W(), ap_fp.die_w_mm,
-             ap_workload_trace(w, n_intervals)),
+             ap_workload_trace(w, n_intervals, trace_elems(M.N_DATA))),
             (f"{w}/simd", simd_fp.power_map(grid_n, dp),
              simd_fp.leakage_W(dp), simd_fp.die_w_mm,
              simd_phase_trace(wl, dp, n_intervals)),

@@ -23,7 +23,7 @@ Bookkeeping (exact, not statistical):
                normalized to one SRAM-cell write = 1 (§3.2, eq 16).
   This generalizes eq (16): with the adder's 1/8 match probability the
   expectation of our measured count equals the paper's closed form — tested in
-  tests/test_power_model.py.
+  tests/test_paper_models.py.
 """
 from __future__ import annotations
 
@@ -212,6 +212,20 @@ class APEngine:
         """Readback WITHOUT charging cycles (debug / test oracle only)."""
         sub = self.planes[field.start:field.start + field.width]
         return np.asarray(bp.unpack_words(sub))
+
+    def read_tagged(self, field: Field) -> tuple[np.ndarray, np.ndarray]:
+        """Sequential readout of ``field`` for the currently TAGGED rows.
+
+        Charges 1 read cycle per tagged row (§2.1) — the associative
+        "read responders" loop.  Returns (row_indices, values), both
+        host numpy, ordered by row index.
+        """
+        rows = np.where(np.asarray(bp.unpack_bits(self.tag)))[0]
+        self.read_cycles += len(rows)
+        self.cycles += len(rows)
+        sub = self.planes[field.start:field.start + field.width]
+        vals = np.asarray(bp.unpack_words(sub))[rows]
+        return rows, vals
 
     # ------------------------------------------------------ silicon ops
     def compare(self, cols: Sequence[int], key: Sequence[int],

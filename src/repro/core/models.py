@@ -49,12 +49,29 @@ GAMMA_W_MM2 = 5e-2        # leakage [W / mm^2]
 N_DATA = 2 ** 20          # workload data-set size (paper: N = 2^20)
 BYTES_PER_WORD = 4        # m = 32-bit data words
 
-# Canonical operational (arithmetic) intensities of the three kernels at
-# N = 2^20 [flop/word] — the Fig 4 ordering anchor (DESIGN.md §7.3).  Used
-# both to scale synchronization intensity (inversely, §3.1) and as the
+# Canonical operational (arithmetic) intensities at N = 2^20 [flop/word] —
+# the Fig 4 ordering anchor for the paper trio, extended to the suite
+# workloads (DESIGN.md §3.2 for the derivations).  Used both to scale
+# synchronization intensity (inversely, §3.1) and as the
 # compute-to-traffic ratio for the DRAM activate-power estimate
 # (:func:`mem_traffic_bytes_per_s`).
-ARITH_INTENSITY = {"dmm": 45.0, "fft": 10.0, "bs": 150.0}
+ARITH_INTENSITY = {
+    "dmm": 45.0, "fft": 10.0, "bs": 150.0,
+    # suite additions: streaming / search kernels are traffic-dominated
+    "sort": 2.0,     # compare-exchange streams, ~2 ops per word touched
+    "spmv": 4.0,     # 2 flops per nonzero over index + value traffic
+    "knn": 3.0,      # d |x-q| accumulations over d streamed words
+    "hist": 1.5,     # one bin op per streamed word
+}
+
+# AP per-PU speedups for the suite workloads, from bit-serial cycle
+# counts pinned by tests/test_new_workloads.py (DESIGN.md §3.2):
+# sort: a min-extraction retires one distinct value in ~3m cycles vs one
+#   SIMD compare/cycle; spmv: mul-bound like DMM with a 2x tag-masked
+#   reduction overhead (filled in by _calibrate); knn: d-feature LUT
+#   distance ~d*2^m cycles vs 2d SIMD MACs; hist: one response-counted
+#   COMPARE per bin vs ~1 op/word, blended over paper-scale bin counts.
+_S_APU_SUITE = {"sort": 1.0 / 96.0, "knn": 1.0 / 128.0, "hist": 1.0 / 100.0}
 
 
 def _norm_area_to_mm2(a_norm: float) -> float:
@@ -103,11 +120,17 @@ def _calibrate() -> dict[str, Workload]:
     # the fp-mul bound.
     s_apu_fft = s_apu_dmm / 2.0
     s_apu_bs = S_APU_LB * 1.5
-    return {
+
+    out = {
         "dmm": Workload("dmm", i_s_dmm, s_apu_dmm),
         "fft": Workload("fft", i_s_fft, s_apu_fft),
         "bs": Workload("bs", i_s_bs, s_apu_bs),
     }
+    # --- suite workloads: same inverse-AI scaling off the DMM anchor ------
+    for name, s_apu in {**_S_APU_SUITE, "spmv": s_apu_dmm / 2.0}.items():
+        i_s = i_s_dmm * ai_dmm / ARITH_INTENSITY[name]
+        out[name] = Workload(name, i_s, s_apu)
+    return out
 
 
 WORKLOADS = _calibrate()

@@ -300,6 +300,75 @@ class StackReport:
 
 
 # ---------------------------------------------------------------------------
+# per-case assembly (shared by run_stack_cosim and repro.sweep.engine)
+# ---------------------------------------------------------------------------
+
+def assemble_case(dp: M.DesignPoint, workload: str, machine: str,
+                  spec: StackSpec, params: StackParams, grid_n: int,
+                  trace: cosim.PowerTrace, margin: int):
+    """Build the closed-loop replay inputs for one (workload, machine) case.
+
+    Returns (dyn, leak0, refresh0, logic_mask, F, cap3) — exactly the
+    per-case leaves :func:`closed_loop_batch` stacks over its leading
+    batch axis.  ``machine`` is "ap" or "simd"; the DRAM traffic figure
+    is shared by construction (``models.mem_traffic_bytes_per_s``).
+    """
+    wl = M.WORKLOADS[workload]
+    traffic = M.mem_traffic_bytes_per_s(workload, dp.ap_n_pus)
+    if machine == "ap":
+        fp = APFloorplan(die_w_mm=math.sqrt(dp.ap_area_mm2))
+        pmap = fp.power_map(grid_n, dp.ap_power_W)
+        leak_W = fp.leakage_W()
+    elif machine == "simd":
+        fp = SIMDFloorplan(die_w_mm=math.sqrt(dp.simd_area_mm2))
+        pmap = fp.power_map(grid_n, dp)
+        leak_W = fp.leakage_W(dp)
+    else:
+        raise ValueError(f"unknown machine {machine!r}")
+    del wl  # the SIMD trace is built by the caller (needs n_intervals)
+    grid = thermal.Grid(die_w=fp.die_w_mm * MM, ny=grid_n, nx=grid_n,
+                        params=params, spec=spec, margin=margin)
+    dfp = dram.DRAMFloorplan(die_w_mm=fp.die_w_mm)
+    dyn, l0, r0, lm = stack_power_inputs(spec, grid, trace, pmap, leak_W,
+                                         dfp, traffic)
+    return dyn, l0, r0, lm, grid.fields(), grid.capacity_field()
+
+
+def replay_cases(cases, spec: StackSpec, fb: FeedbackParams, grid_n: int,
+                 interval_dt: float, *, theta: float = 1.0,
+                 steps_per_interval: int = 2, n_cg: int = 40,
+                 margin: int | None = None, use_pallas: bool = False
+                 ) -> dict[str, "StackReport"]:
+    """Replay pre-assembled cases as ONE vmapped closed-loop batch.
+
+    ``cases``: sequence of (label, :func:`assemble_case` leaves) — every
+    case must share the stack ``spec`` and grid shape.  Returns
+    {label: StackReport}.  This is the single lowering both
+    :func:`run_stack_cosim` and ``repro.sweep.engine`` go through.
+    """
+    margin = grid_n // 4 if margin is None else margin
+    labels = [label for label, _ in cases]
+    dyns, leaks, refs, masks, Fs, caps = zip(*(leaves for _, leaves in cases))
+    Fb = {k: jnp.stack([F[k] for F in Fs]) for k in Fs[0]}
+    _, peaks, mins, res, thr, ref_W, leak_W = closed_loop_batch(
+        jnp.asarray(np.stack(dyns)), jnp.asarray(np.stack(leaks)),
+        jnp.asarray(np.stack(refs)), jnp.asarray(np.stack(masks)), Fb,
+        jnp.stack(caps), interval_dt, theta, fb=fb, die_n=grid_n,
+        n_die=spec.n_die_layers, steps_per_interval=steps_per_interval,
+        n_cg=n_cg, margin=margin, use_pallas=use_pallas)
+    base_ref = dram.DRAMFloorplan(die_w_mm=1.0).base_refresh_W() \
+        * len(spec.dram_layers)
+    return {
+        label: StackReport(
+            label=label, interval_s=interval_dt, spec=spec,
+            peak_C=np.asarray(peaks[i]), min_C=np.asarray(mins[i]),
+            residual_C=np.asarray(res[i]), throttle=np.asarray(thr[i]),
+            refresh_W=np.asarray(ref_W[i]), leak_W=np.asarray(leak_W[i]),
+            base_refresh_W=base_ref, tol_C=fb.picard_tol_C)
+        for i, label in enumerate(labels)}
+
+
+# ---------------------------------------------------------------------------
 # top-level driver: batched AP+DRAM vs SIMD+DRAM closed-loop co-simulation
 # ---------------------------------------------------------------------------
 
@@ -320,58 +389,26 @@ def run_stack_cosim(workloads=("dmm", "fft", "bs"), n_dram: int = 2,
     spec = dram_on_logic(n_dram, params)
     margin = grid_n // 4
     interval_dt = t_end / n_intervals
+    n_small = cosim.trace_elems(M.N_DATA)    # shared trace-sizing rule
 
-    labels, dyns, leaks, refs, masks, Fs, caps = [], [], [], [], [], [], []
-    dps = {}
+    cases, dps = [], {}
     for w in workloads:
         dp = cosim.comparable_design_point(w)
         dps[w] = dp
         wl = M.WORKLOADS[w]
-        traffic = M.mem_traffic_bytes_per_s(w, dp.ap_n_pus)
-        cases = (
-            ("ap", APFloorplan(die_w_mm=math.sqrt(dp.ap_area_mm2)),
-             cosim.ap_workload_trace(w, n_intervals)),
-            ("simd", SIMDFloorplan(die_w_mm=math.sqrt(dp.simd_area_mm2)),
-             cosim.simd_phase_trace(wl, dp, n_intervals)),
-        )
-        for machine, fp, trace in cases:
-            if machine == "ap":
-                pmap = fp.power_map(grid_n, dp.ap_power_W)
-                leak_W = fp.leakage_W()
-            else:
-                pmap = fp.power_map(grid_n, dp)
-                leak_W = fp.leakage_W(dp)
-            grid = thermal.Grid(die_w=fp.die_w_mm * MM, ny=grid_n,
-                                nx=grid_n, params=params, spec=spec,
-                                margin=margin)
-            dfp = dram.DRAMFloorplan(die_w_mm=fp.die_w_mm)
-            dyn, l0, r0, lm = stack_power_inputs(
-                spec, grid, trace, pmap, leak_W, dfp, traffic)
-            labels.append(f"{w}/{machine}")
-            dyns.append(dyn)
-            leaks.append(l0)
-            refs.append(r0)
-            masks.append(lm)
-            Fs.append(grid.fields())
-            caps.append(grid.capacity_field())
+        pair = (("ap", cosim.ap_workload_trace(w, n_intervals, n_small)),
+                ("simd", cosim.simd_phase_trace(wl, dp, n_intervals)))
+        for machine, trace in pair:
+            cases.append((f"{w}/{machine}", assemble_case(
+                dp, w, machine, spec, params, grid_n, trace, margin)))
 
-    Fb = {k: jnp.stack([F[k] for F in Fs]) for k in Fs[0]}
-    _, peaks, mins, res, thr, ref_W, leak_W = closed_loop_batch(
-        jnp.asarray(np.stack(dyns)), jnp.asarray(np.stack(leaks)),
-        jnp.asarray(np.stack(refs)), jnp.asarray(np.stack(masks)), Fb,
-        jnp.stack(caps), interval_dt, theta, fb=fb, die_n=grid_n,
-        n_die=spec.n_die_layers, steps_per_interval=steps_per_interval,
-        n_cg=n_cg, margin=margin, use_pallas=use_pallas)
-
-    base_ref = dram.DRAMFloorplan(die_w_mm=1.0).base_refresh_W() * n_dram
+    reports = replay_cases(cases, spec, fb, grid_n, interval_dt,
+                           theta=theta,
+                           steps_per_interval=steps_per_interval,
+                           n_cg=n_cg, margin=margin, use_pallas=use_pallas)
     out: dict = {"design_points": dps, "spec": spec,
                  "interval_s": interval_dt, "t_end": t_end, "fb": fb}
-    for i, label in enumerate(labels):
+    for label, rep in reports.items():
         w, machine = label.split("/")
-        out.setdefault(w, {})[machine] = StackReport(
-            label=label, interval_s=interval_dt, spec=spec,
-            peak_C=np.asarray(peaks[i]), min_C=np.asarray(mins[i]),
-            residual_C=np.asarray(res[i]), throttle=np.asarray(thr[i]),
-            refresh_W=np.asarray(ref_W[i]), leak_W=np.asarray(leak_W[i]),
-            base_refresh_W=base_ref, tol_C=fb.picard_tol_C)
+        out.setdefault(w, {})[machine] = rep
     return out

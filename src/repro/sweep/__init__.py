@@ -1,0 +1,12 @@
+"""Batched scenario-sweep subsystem.
+
+Declares a scenario grid — workloads × dataset sizes × DRAM stack
+heights × feedback/DTM modes — as a :class:`~repro.sweep.spec.SweepSpec`
+(``spec.py``), lowers it to vmapped closed-loop replays over the
+``stack/feedback`` path (``engine.py``), and serves repeat invocations
+bit-identically from a content-hashed on-disk cache (``cache.py``).
+This is the substrate the benchmarks drive and later scaling PRs
+(sharding, multi-backend) plug into.
+"""
+from repro.sweep.spec import SweepPoint, SweepSpec  # noqa: F401
+from repro.sweep.engine import SweepRecord, SweepResult, run_sweep  # noqa: F401

@@ -1,0 +1,88 @@
+"""Content-hashed on-disk result cache for sweeps.
+
+One sweep = one ``sweep_<hash>.npz`` under the cache directory
+(``$REPRO_SWEEP_CACHE`` or ``.sweep_cache/``), where ``<hash>`` is
+:meth:`SweepSpec.content_hash` — a SHA-256 digest of the spec's
+canonical JSON plus a schema version (DESIGN.md §8).  The npz holds the
+per-record result arrays verbatim (float32/float64, so reloads are
+bit-identical) and a JSON manifest with the full canonical spec, which
+:func:`load` verifies against the requesting spec so a truncated-hash
+collision can never serve wrong results.  Stack geometry is NOT stored:
+it is deterministic from the point (``dram_on_logic(n_dram)``) and is
+rebuilt on load.
+"""
+from __future__ import annotations
+
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+
+from repro.stack import dram, feedback
+from repro.stack.spec import dram_on_logic
+from repro.sweep.engine import SweepRecord, SweepResult, resolve_fb
+from repro.sweep.spec import SweepPoint, SweepSpec
+
+_ARRAYS = ("peak_C", "min_C", "residual_C", "throttle", "refresh_W",
+           "leak_W")
+
+
+def default_cache_dir() -> Path:
+    return Path(os.environ.get("REPRO_SWEEP_CACHE", ".sweep_cache"))
+
+
+def path_for(spec: SweepSpec, cache_dir=None) -> Path:
+    base = Path(cache_dir) if cache_dir is not None else default_cache_dir()
+    return base / f"sweep_{spec.content_hash()}.npz"
+
+
+def store(result: SweepResult, cache_dir=None) -> Path:
+    """Persist a sweep result; returns the written path."""
+    path = path_for(result.spec, cache_dir)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    payload: dict[str, np.ndarray] = {}
+    for i, rec in enumerate(result.records):
+        for name in _ARRAYS:
+            payload[f"r{i}_{name}"] = getattr(rec.report, name)
+    manifest = {
+        "spec": result.spec.canonical(),
+        "records": [{"machine": r.machine,
+                     "point": [r.point.workload, r.point.size,
+                               r.point.n_dram, r.point.fb_mode]}
+                    for r in result.records],
+    }
+    tmp = path.with_suffix(".tmp.npz")
+    np.savez(tmp, manifest=np.array(json.dumps(manifest)), **payload)
+    os.replace(tmp, path)
+    return path
+
+
+def load(spec: SweepSpec, cache_dir=None) -> SweepResult | None:
+    """Load a cached sweep for ``spec``; None on miss or manifest
+    mismatch (hash-collision guard)."""
+    path = path_for(spec, cache_dir)
+    if not path.exists():
+        return None
+    with np.load(path, allow_pickle=False) as z:
+        manifest = json.loads(str(z["manifest"]))
+        if manifest["spec"] != spec.canonical():
+            return None
+        interval_dt = spec.t_end / spec.n_intervals
+        records = []
+        for i, meta in enumerate(manifest["records"]):
+            w, size, n_dram, fb_mode = meta["point"]
+            point = SweepPoint(w, int(size), int(n_dram), fb_mode)
+            stack_spec = dram_on_logic(int(n_dram))
+            base_ref = dram.DRAMFloorplan(die_w_mm=1.0).base_refresh_W() \
+                * int(n_dram)
+            arrays = {name: z[f"r{i}_{name}"] for name in _ARRAYS}
+            report = feedback.StackReport(
+                label=f"{point.label}/{meta['machine']}",
+                interval_s=interval_dt, spec=stack_spec,
+                base_refresh_W=base_ref,
+                tol_C=resolve_fb(fb_mode).picard_tol_C, **arrays)
+            records.append(SweepRecord(point=point,
+                                       machine=meta["machine"],
+                                       report=report))
+    return SweepResult(spec=spec, records=tuple(records), from_cache=True)

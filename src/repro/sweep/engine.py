@@ -1,0 +1,172 @@
+"""Lower a :class:`~repro.sweep.spec.SweepSpec` to batched replays.
+
+Scenario points that share a stack height and feedback mode share one
+jitted program, so the engine groups the grid by ``(n_dram, fb_mode)``
+and replays each group as a SINGLE vmapped ``closed_loop_batch`` call
+over every (point × machine) case — the same path
+``stack/feedback.run_stack_cosim`` uses, now fed from the declarative
+spec instead of hand-rolled benchmark loops.  Results come back as
+:class:`SweepRecord`s wrapping the familiar
+:class:`~repro.stack.feedback.StackReport`, in deterministic
+``spec.points() × spec.machines`` order, and are persisted through the
+content-hashed cache (``repro.sweep.cache``) so a repeat invocation is
+served bit-identically from disk.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import defaultdict
+
+from repro.core import cosim
+from repro.core import models as M
+from repro.core.constants import DRAM_LIMIT_C
+from repro.stack import feedback
+from repro.stack.spec import PAPER_STACK, StackParams, dram_on_logic
+from repro.sweep.spec import SweepPoint, SweepSpec
+
+
+def resolve_fb(mode: str, n_picard: int = 6) -> feedback.FeedbackParams:
+    """Map a spec-level feedback mode to its FeedbackParams.
+
+    ``n_picard`` applies to the implicit-coupling modes; "open" keeps
+    the fixed 2-iterate count of :meth:`FeedbackParams.disabled`."""
+    if mode == "closed":
+        return feedback.FeedbackParams(n_picard=n_picard)
+    if mode == "nodtm":
+        return feedback.FeedbackParams(dtm_trip_C=math.inf,
+                                       n_picard=n_picard)
+    if mode == "open":
+        return feedback.FeedbackParams.disabled()
+    raise ValueError(f"unknown fb_mode {mode!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepRecord:
+    """One (scenario point, machine) outcome."""
+    point: SweepPoint
+    machine: str
+    report: feedback.StackReport
+
+    @property
+    def label(self) -> str:
+        return f"{self.point.label}/{self.machine}"
+
+    @property
+    def limit_layers(self) -> tuple[int, ...]:
+        """Layers the 85 °C verdict is judged on: the DRAM dies when the
+        stack has any, else every die layer (bare-logic stacking case)."""
+        spec = self.report.spec
+        return spec.dram_layers or tuple(range(spec.n_die_layers))
+
+    @property
+    def time_above_limit_s(self) -> float:
+        return float(self.report.time_above(
+            layers=self.limit_layers).max())
+
+    @property
+    def verdict_ok(self) -> bool:
+        """May this die sit under (or be) 3D DRAM?  (§4.3 ceiling)"""
+        return self.time_above_limit_s == 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """All records of one sweep, in spec.points() × spec.machines order."""
+    spec: SweepSpec
+    records: tuple[SweepRecord, ...]
+    from_cache: bool = False
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def get(self, point: SweepPoint, machine: str) -> SweepRecord:
+        for r in self.records:
+            if r.point == point and r.machine == machine:
+                return r
+        raise KeyError((point, machine))
+
+    def table(self) -> str:
+        """Per-point verdict table (CSV-ish, one row per record)."""
+        lines = ["workload,size,n_dram,fb,machine,logic_peak_C,"
+                 "dram_peak_C,refresh_x,dtm_x,above_85C_s,resid_C,verdict"]
+        for r in self.records:
+            p, rep = r.point, r.report
+            dram_pk = rep.dram_peak_C.max() if rep.spec.dram_layers else 0.0
+            lines.append(
+                f"{p.workload},{p.size},{p.n_dram},{p.fb_mode},{r.machine},"
+                f"{rep.logic_peak_C.max():.1f},{dram_pk:.1f},"
+                f"{rep.refresh_overhead:.3f},{rep.dtm_slowdown:.3f},"
+                f"{r.time_above_limit_s:.3f},{rep.residual_C.max():.2g},"
+                f"{'OK' if r.verdict_ok else 'BLOCKED'}")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# the lowering
+# ---------------------------------------------------------------------------
+
+def _run_group(spec: SweepSpec, points: list[SweepPoint], n_dram: int,
+               fb_mode: str, params: StackParams
+               ) -> dict[tuple[SweepPoint, str], SweepRecord]:
+    """Replay one (n_dram, fb_mode) group as a single vmapped batch."""
+    stack_spec = dram_on_logic(n_dram, params)
+    fb = resolve_fb(fb_mode, spec.n_picard)
+    margin = spec.grid_n // 4
+    interval_dt = spec.t_end / spec.n_intervals
+
+    keys, cases = [], []
+    for p in points:
+        dp = cosim.comparable_design_point(p.workload, p.size)
+        wl = M.WORKLOADS[p.workload]
+        for mc in spec.machines:
+            trace = cosim.ap_workload_trace(
+                p.workload, spec.n_intervals, spec.trace_elems(p.size)) \
+                if mc == "ap" else \
+                cosim.simd_phase_trace(wl, dp, spec.n_intervals)
+            keys.append((p, mc))
+            cases.append((f"{p.label}/{mc}", feedback.assemble_case(
+                dp, p.workload, mc, stack_spec, params, spec.grid_n,
+                trace, margin)))
+
+    reports = feedback.replay_cases(
+        cases, stack_spec, fb, spec.grid_n, interval_dt, theta=spec.theta,
+        steps_per_interval=spec.steps_per_interval, n_cg=spec.n_cg,
+        margin=margin)
+    return {(p, mc): SweepRecord(point=p, machine=mc,
+                                 report=reports[f"{p.label}/{mc}"])
+            for p, mc in keys}
+
+
+def run_sweep(spec: SweepSpec, cache_dir=None, use_cache: bool = True,
+              params: StackParams = PAPER_STACK) -> SweepResult:
+    """Run (or load) a sweep.  With ``use_cache`` the content-hashed
+    on-disk entry is consulted first and written after a live run, so a
+    second invocation of the same spec is served bit-identically from
+    disk."""
+    from repro.sweep import cache
+    if params != PAPER_STACK:
+        use_cache = False       # cache keys don't cover custom stack params
+    if use_cache:
+        hit = cache.load(spec, cache_dir)
+        if hit is not None:
+            return hit
+
+    by_group: dict[tuple[int, str], list[SweepPoint]] = defaultdict(list)
+    for p in spec.points():
+        by_group[(p.n_dram, p.fb_mode)].append(p)
+
+    results: dict[tuple[SweepPoint, str], SweepRecord] = {}
+    for (n_dram, fb_mode), pts in sorted(by_group.items()):
+        results.update(_run_group(spec, pts, n_dram, fb_mode, params))
+
+    records = tuple(results[(p, mc)] for p in spec.points()
+                    for mc in spec.machines)
+    out = SweepResult(spec=spec, records=records)
+    if use_cache:
+        cache.store(out, cache_dir)
+    return out
+
+
+__all__ = ["SweepRecord", "SweepResult", "run_sweep", "resolve_fb",
+           "DRAM_LIMIT_C"]

@@ -1,0 +1,110 @@
+"""Declarative sweep specifications and their content hash.
+
+A :class:`SweepSpec` names a full scenario grid — registered workloads ×
+dataset sizes × DRAM die counts × feedback modes (× machines) — plus the
+replay resolution (grid, intervals, horizon, solver knobs).  It is pure
+data: :meth:`SweepSpec.points` enumerates the Cartesian product and
+:meth:`SweepSpec.content_hash` digests the *canonical JSON* of every
+field (plus a schema version) into the cache key, so any field
+perturbation — one more workload, a different DTM mode, a finer grid —
+misses the cache while the identical spec always hits it
+(DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import json
+
+# Bump when the result schema or replay semantics change: a new schema
+# must never be served stale results from an old cache entry.
+CACHE_SCHEMA = 1
+
+#: feedback-mode axis -> FeedbackParams factory (resolved in engine.py)
+FB_MODES = ("closed", "nodtm", "open")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One scenario: a (workload, dataset size, stack, feedback) tuple."""
+    workload: str
+    size: int            # dataset size N (the AP is sized to it, §3)
+    n_dram: int          # DRAM dies stacked on the logic stack
+    fb_mode: str         # one of FB_MODES
+
+    @property
+    def label(self) -> str:
+        return f"{self.workload}/N{self.size}/dram{self.n_dram}/{self.fb_mode}"
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """A scenario grid and the resolution to replay it at."""
+    workloads: tuple[str, ...]
+    sizes: tuple[int, ...] = (2 ** 20,)
+    n_dram: tuple[int, ...] = (2,)
+    fb_modes: tuple[str, ...] = ("closed",)
+    machines: tuple[str, ...] = ("ap", "simd")
+    grid_n: int = 16
+    n_intervals: int = 24
+    t_end: float = 0.25
+    steps_per_interval: int = 2
+    n_cg: int = 40
+    theta: float = 1.0
+    n_picard: int = 6     # Picard iterations for the implicit couplings;
+    # the documented 0.05 °C/interval bar needs ~20 in the most violent
+    # sweep regimes (refresh 4x + leakage much above trip) — "open" mode
+    # keeps its own fixed count (FeedbackParams.disabled)
+
+    def __post_init__(self):
+        from repro.workloads import registry
+        for w in self.workloads:
+            registry.get(w)                      # raises on unknown names
+        for mode in self.fb_modes:
+            if mode not in FB_MODES:
+                raise ValueError(f"unknown fb_mode {mode!r}; "
+                                 f"expected one of {FB_MODES}")
+        for mc in self.machines:
+            if mc not in ("ap", "simd"):
+                raise ValueError(f"unknown machine {mc!r}")
+        if any(s < 1024 for s in self.sizes):
+            raise ValueError("dataset sizes below 1024 have no "
+                             "comparable design point")
+        if any(n < 0 for n in self.n_dram):
+            raise ValueError("n_dram must be >= 0")
+        if self.n_picard < 1:
+            raise ValueError("n_picard must be >= 1")
+
+    # -------------------------------------------------------------- points
+    def points(self) -> tuple[SweepPoint, ...]:
+        """The Cartesian scenario grid, in deterministic order."""
+        return tuple(SweepPoint(w, s, d, f) for w, s, d, f
+                     in itertools.product(self.workloads, self.sizes,
+                                          self.n_dram, self.fb_modes))
+
+    @property
+    def n_points(self) -> int:
+        return (len(self.workloads) * len(self.sizes) * len(self.n_dram)
+                * len(self.fb_modes))
+
+    def trace_elems(self, size: int) -> int:
+        """Small-instance element count for a dataset size — delegates
+        to the shared sizing rule (`cosim.trace_elems`) so sweeps and
+        the standalone drivers replay identical traces for identical
+        scenarios."""
+        from repro.core import cosim
+        return cosim.trace_elems(size)
+
+    # --------------------------------------------------------------- hash
+    def canonical(self) -> dict:
+        """Canonical JSON form (the hash input): tuples become lists so
+        the dict compares equal after any JSON round-trip."""
+        d = dataclasses.asdict(self)
+        d["schema"] = CACHE_SCHEMA
+        return json.loads(json.dumps(d))
+
+    def content_hash(self) -> str:
+        blob = json.dumps(self.canonical(), sort_keys=True,
+                          separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:20]

@@ -40,7 +40,7 @@ def ap_matmul(A: np.ndarray, B: np.ndarray, m: int = 8,
     if (A >= (1 << m)).any() or (B >= (1 << m)).any():
         raise ValueError(f"entries must fit in {m} bits")
 
-    n_words = max(n * n, 32)
+    n_words = max(((n * n + 31) // 32) * 32, 32)   # round up to lane width
     n_bits = plan_bits(n, m)
     eng = APEngine(n_words=n_words, n_bits=n_bits, backend=backend)
 

@@ -1,0 +1,155 @@
+"""Workload registry: one place that binds a workload name to (a) its
+exact bit-serial AP implementation for trace capture and (b) its
+calibrated analytic :class:`repro.core.models.Workload` entry.
+
+Every registered workload provides ``run_small(n)`` — run an n-element
+instance on the :class:`~repro.core.engine.APEngine` and return the
+engine counters *including* the ``trace_cycles`` / ``trace_energy``
+event arrays — so any consumer (co-sim trace capture, the sweep engine,
+benchmarks) can treat the whole suite uniformly.  Names are unique;
+:func:`register` rejects duplicates so two modules can never silently
+shadow each other's calibration.  The paper's §3.1 trio and the four
+suite additions self-register on import of :mod:`repro.workloads`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core import models as M
+
+_REGISTRY: dict[str, "WorkloadDef"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadDef:
+    """One registered workload.
+
+    ``run_small(n)`` executes an ~n-element instance and returns engine
+    counters with trace events; ``paper`` marks the original §3.1 trio.
+    """
+    name: str
+    title: str
+    run_small: Callable[[int], dict]
+    paper: bool = False
+
+    @property
+    def model(self) -> M.Workload:
+        """The calibrated analytic entry (eqs (2)-(17) constants)."""
+        return M.WORKLOADS[self.name]
+
+
+def register(wd: WorkloadDef) -> WorkloadDef:
+    if wd.name in _REGISTRY:
+        raise ValueError(f"workload {wd.name!r} already registered")
+    if wd.name not in M.WORKLOADS:
+        raise ValueError(f"workload {wd.name!r} has no calibrated "
+                         f"models.Workload entry")
+    _REGISTRY[wd.name] = wd
+    return wd
+
+
+def get(name: str) -> WorkloadDef:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown workload {name!r}; registered: "
+                         f"{names()}")
+    return _REGISTRY[name]
+
+
+def names() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def trace_counters(name: str, n_elems: int = 64) -> dict:
+    """Run the named workload's ~n_elems-element instance for its trace."""
+    return get(name).run_small(n_elems)
+
+
+# ---------------------------------------------------------------------------
+# suite registrations.  Each runner sizes a small exact instance off
+# ``n`` so the captured activity profile keeps its per-phase structure
+# (README §co-simulation: the co-sim dilates the shape onto package
+# time scales; only the shape matters).
+# ---------------------------------------------------------------------------
+
+def _run_dmm(n: int) -> dict:
+    rng = np.random.default_rng(0)
+    from repro.workloads import dmm
+    side = max(4, int(np.sqrt(n)) // 2 * 2)
+    A = rng.integers(0, 64, (side, side), dtype=np.uint64)
+    B = rng.integers(0, 64, (side, side), dtype=np.uint64)
+    _, ctr = dmm.ap_matmul(A, B, m=6)
+    return ctr
+
+
+def _run_fft(n: int) -> dict:
+    rng = np.random.default_rng(0)
+    from repro.workloads import fft
+    N = 1 << max(3, int(np.log2(max(n, 8))) // 2 + 2)
+    x = (rng.normal(size=N) + 1j * rng.normal(size=N)) * (0.3 / np.sqrt(N))
+    _, ctr = fft.ap_fft(x, m=12, frac=9)
+    return ctr
+
+
+def _run_bs(n: int) -> dict:
+    rng = np.random.default_rng(0)
+    from repro.workloads import blackscholes as bs
+    k = max(n, 32)
+    _, ctr = bs.ap_blackscholes(rng.uniform(0.9, 1.4, k),
+                                rng.uniform(0.9, 1.4, k),
+                                rng.uniform(0.5, 1.5, k),
+                                rng.uniform(0.2, 0.5, k))
+    return ctr
+
+
+def _run_sort(n: int) -> dict:
+    rng = np.random.default_rng(0)
+    from repro.workloads import sort
+    _, ctr = sort.ap_sort(rng.integers(0, 256, max(n, 32),
+                                       dtype=np.uint64), m=8)
+    return ctr
+
+
+def _run_spmv(n: int) -> dict:
+    rng = np.random.default_rng(0)
+    from repro.workloads import spmv
+    n_rows = max(8, int(np.sqrt(max(n, 16))))
+    nnz = max(n, 16)
+    r = rng.integers(0, n_rows, nnz)
+    c = rng.integers(0, n_rows, nnz)
+    v = rng.integers(0, 50, nnz, dtype=np.uint64)
+    x = rng.integers(0, 50, n_rows, dtype=np.uint64)
+    _, ctr = spmv.ap_spmv(r, c, v, x, n_rows, m=6)
+    return ctr
+
+
+def _run_knn(n: int) -> dict:
+    rng = np.random.default_rng(0)
+    from repro.workloads import knn
+    rows = max(n, 32)
+    db = rng.integers(0, 16, (rows, 4), dtype=np.uint64)
+    q = rng.integers(0, 16, 4, dtype=np.uint64)
+    _, ctr = knn.ap_knn(db, q, k=min(5, rows), m=4)
+    return ctr
+
+
+def _run_hist(n: int) -> dict:
+    rng = np.random.default_rng(0)
+    from repro.workloads import histogram
+    _, ctr = histogram.ap_histogram(
+        rng.integers(0, 64, max(n, 32), dtype=np.uint64), n_bins=8, m=6)
+    return ctr
+
+
+for _wd in (
+    WorkloadDef("dmm", "dense matrix multiply (§3.1)", _run_dmm, paper=True),
+    WorkloadDef("fft", "radix-2 FFT (§3.1)", _run_fft, paper=True),
+    WorkloadDef("bs", "Black-Scholes (§3.1)", _run_bs, paper=True),
+    WorkloadDef("sort", "associative sort (min-extraction)", _run_sort),
+    WorkloadDef("spmv", "sparse matrix-vector multiply", _run_spmv),
+    WorkloadDef("knn", "k-nearest-neighbour search", _run_knn),
+    WorkloadDef("hist", "histogram (response-counter binning)", _run_hist),
+):
+    register(_wd)

@@ -1,0 +1,135 @@
+"""Suite workloads (sort / spmv / knn / hist): NumPy-oracle correctness,
+cycle-scaling claims, and exact trace-energy accounting — mirroring
+tests/test_workloads.py for the paper trio."""
+import numpy as np
+import pytest
+
+from repro.workloads import histogram as hist
+from repro.workloads import knn, registry, sort, spmv
+
+
+def _check_energy(ctr):
+    """Trace events must sum to the engine's energy counter exactly
+    (same accounting, same event order; fp tolerance only)."""
+    assert ctr["trace_energy"].sum() == pytest.approx(ctr["energy"],
+                                                      rel=1e-9)
+    assert ctr["trace_cycles"].shape == ctr["trace_energy"].shape
+
+
+# ------------------------------------------------------------------ sort
+def test_sort_exact():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 200, 50, dtype=np.uint64)
+    y, ctr = sort.ap_sort(x, m=8)
+    np.testing.assert_array_equal(y, sort.reference(x))
+    _check_energy(ctr)
+
+
+def test_sort_with_ties_and_cycles_scale_with_distinct_values():
+    """Min-extraction retires a whole tie group at once: duplicating the
+    multiset leaves the compare/write cycle count unchanged."""
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 32, 32, dtype=np.uint64)
+    y1, c1 = sort.ap_sort(x, m=5)
+    x4 = np.tile(x, 4)
+    y4, c4 = sort.ap_sort(x4, m=5)
+    np.testing.assert_array_equal(y1, sort.reference(x))
+    np.testing.assert_array_equal(y4, sort.reference(x4))
+    assert c4["cycles"] == c1["cycles"]
+
+
+# ------------------------------------------------------------------ spmv
+def test_spmv_exact():
+    rng = np.random.default_rng(2)
+    n_rows, nnz = 8, 24
+    r = rng.integers(0, n_rows, nnz)
+    c = rng.integers(0, n_rows, nnz)
+    v = rng.integers(0, 50, nnz, dtype=np.uint64)
+    x = rng.integers(0, 50, n_rows, dtype=np.uint64)
+    y, ctr = spmv.ap_spmv(r, c, v, x, n_rows, m=6)
+    np.testing.assert_array_equal(y, spmv.reference(r, c, v, x, n_rows))
+    _check_energy(ctr)
+
+
+def test_spmv_cycles_independent_of_nnz():
+    """Products are word-parallel and the reduction scans output rows,
+    so cycles do not grow with the number of stored nonzeros (until the
+    word count crosses a 32-lane boundary)."""
+    rng = np.random.default_rng(3)
+    n_rows = 8
+    cycles = {}
+    for nnz in (16, 32):
+        r = rng.integers(0, n_rows, nnz)
+        c = rng.integers(0, n_rows, nnz)
+        v = rng.integers(0, 30, nnz, dtype=np.uint64)
+        x = rng.integers(0, 30, n_rows, dtype=np.uint64)
+        y, ctr = spmv.ap_spmv(r, c, v, x, n_rows, m=5)
+        np.testing.assert_array_equal(y, spmv.reference(r, c, v, x, n_rows))
+        cycles[nnz] = ctr["cycles"]
+    assert cycles[16] == cycles[32]
+
+
+# ------------------------------------------------------------------ knn
+def test_knn_exact_with_stable_ties():
+    rng = np.random.default_rng(4)
+    db = rng.integers(0, 16, (48, 4), dtype=np.uint64)
+    q = rng.integers(0, 16, 4, dtype=np.uint64)
+    idx, ctr = knn.ap_knn(db, q, k=7, m=4)
+    np.testing.assert_array_equal(idx, knn.reference(db, q, 7))
+    _check_energy(ctr)
+
+
+def test_knn_distance_cycles_independent_of_db_size():
+    """The LUT distance phase is word-parallel: total cycles minus the
+    per-responder readout do not grow with the database size."""
+    rng = np.random.default_rng(5)
+    q = rng.integers(0, 16, 4, dtype=np.uint64)
+    cyc = {}
+    for n in (32, 128):
+        db = rng.integers(0, 16, (n, 4), dtype=np.uint64)
+        idx, ctr = knn.ap_knn(db, q, k=1, m=4)
+        np.testing.assert_array_equal(idx, knn.reference(db, q, 1))
+        cyc[n] = ctr["cycles"] - ctr["read_cycles"]
+    # min-extraction narrowing adds at most one retire write per bit
+    assert abs(cyc[128] - cyc[32]) <= 2 * 8
+
+
+# ------------------------------------------------------------------ hist
+def test_histogram_exact_and_one_cycle_per_bin():
+    rng = np.random.default_rng(6)
+    x = rng.integers(0, 64, 100, dtype=np.uint64)
+    h, ctr = hist.ap_histogram(x, 8, m=6)
+    np.testing.assert_array_equal(h, hist.reference(x, 8, m=6))
+    assert h.sum() == 100
+    assert ctr["cycles"] == 8          # exactly one COMPARE per bin
+    _check_energy(ctr)
+
+
+def test_histogram_rejects_bad_bins():
+    with pytest.raises(ValueError):
+        hist.ap_histogram(np.zeros(8, np.uint64), 6, m=4)   # not a pow2
+    with pytest.raises(ValueError):
+        hist.ap_histogram(np.zeros(8, np.uint64), 1, m=4)   # degenerate
+    with pytest.raises(ValueError):
+        hist.ap_histogram(np.zeros(8, np.uint64), 32, m=4)  # > 2^m
+
+
+# -------------------------------------------------------------- registry
+@pytest.mark.parametrize("name", ["sort", "spmv", "knn", "hist"])
+def test_registry_trace_counters_and_model(name):
+    """Every suite workload is registered, has a calibrated model entry,
+    a comparable design point, and emits a usable energy trace."""
+    from repro.core import cosim
+    from repro.core import models as M
+
+    wd = registry.get(name)
+    assert wd.model is M.WORKLOADS[name]
+    assert M.ARITH_INTENSITY[name] > 0
+    dp = cosim.comparable_design_point(name)
+    assert dp.ap_n_pus >= 1024 and dp.simd_n_pus > 0
+    ctr = registry.trace_counters(name, 32)
+    assert ctr["trace_energy"].sum() == pytest.approx(ctr["energy"],
+                                                      rel=1e-9)
+    tr = cosim.ap_workload_trace(name, n_intervals=8, n_elems=32)
+    assert tr.activity.shape == (8,)
+    assert tr.activity.mean() == pytest.approx(1.0)

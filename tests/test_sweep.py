@@ -1,0 +1,97 @@
+"""Sweep subsystem: spec hashing, cache hit/miss semantics, bit-identical
+reloads, deterministic record ordering, and registry duplicate rejection."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.sweep import SweepSpec, run_sweep
+from repro.sweep import cache as sweep_cache
+from repro.workloads import registry
+
+_QUICK = dict(workloads=("hist",), sizes=(4096,), n_dram=(1,),
+              fb_modes=("open",), grid_n=8, n_intervals=4,
+              steps_per_interval=1, n_cg=15)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        SweepSpec(workloads=("no_such_workload",))
+    with pytest.raises(ValueError):
+        SweepSpec(workloads=("dmm",), fb_modes=("bogus",))
+    with pytest.raises(ValueError):
+        SweepSpec(workloads=("dmm",), sizes=(128,))
+    with pytest.raises(ValueError):
+        SweepSpec(workloads=("dmm",), machines=("gpu",))
+
+
+def test_spec_hash_sensitivity():
+    """The content hash covers EVERY spec field: perturbing any one of
+    them must change the key; the identical spec must reproduce it."""
+    spec = SweepSpec(**_QUICK)
+    assert spec.content_hash() == SweepSpec(**_QUICK).content_hash()
+    perturbations = dict(
+        workloads=("hist", "sort"), sizes=(8192,), n_dram=(2,),
+        fb_modes=("closed",), machines=("ap",), grid_n=12, n_intervals=8,
+        t_end=0.5, steps_per_interval=2, n_cg=16, theta=0.5, n_picard=8)
+    for field, value in perturbations.items():
+        other = dataclasses.replace(spec, **{field: value})
+        assert other.content_hash() != spec.content_hash(), field
+
+
+def test_points_enumeration():
+    spec = SweepSpec(workloads=("hist", "sort"), sizes=(4096, 8192),
+                     n_dram=(0, 2), fb_modes=("open", "closed"))
+    pts = spec.points()
+    assert len(pts) == spec.n_points == 16
+    assert len(set(pts)) == 16
+    assert pts[0].workload == "hist" and pts[-1].workload == "sort"
+
+
+def test_sweep_cache_roundtrip_bit_identical(tmp_path):
+    spec = SweepSpec(**_QUICK)
+    res = run_sweep(spec, cache_dir=tmp_path)
+    assert not res.from_cache
+    assert sweep_cache.path_for(spec, tmp_path).exists()
+
+    res2 = run_sweep(spec, cache_dir=tmp_path)
+    assert res2.from_cache
+    assert len(res2.records) == len(res.records) \
+        == spec.n_points * len(spec.machines)
+    for a, b in zip(res.records, res2.records):
+        assert a.point == b.point and a.machine == b.machine
+        assert a.report.label == b.report.label
+        assert a.verdict_ok == b.verdict_ok
+        for name in ("peak_C", "min_C", "residual_C", "throttle",
+                     "refresh_W", "leak_W"):
+            av = getattr(a.report, name)
+            bv = getattr(b.report, name)
+            assert av.dtype == bv.dtype
+            np.testing.assert_array_equal(av, bv)
+    assert res.table() == res2.table()
+
+
+def test_sweep_cache_misses_on_perturbation(tmp_path):
+    spec = SweepSpec(**_QUICK)
+    run_sweep(spec, cache_dir=tmp_path)
+    other = dataclasses.replace(spec, n_cg=16)
+    assert sweep_cache.load(other, tmp_path) is None
+    assert sweep_cache.load(spec, tmp_path) is not None
+
+
+def test_sweep_record_order_matches_points(tmp_path):
+    spec = SweepSpec(**dict(_QUICK, workloads=("hist", "sort")))
+    res = run_sweep(spec, cache_dir=tmp_path)
+    expect = [(p, mc) for p in spec.points() for mc in spec.machines]
+    assert [(r.point, r.machine) for r in res.records] == expect
+    # and every record exposes the DRAM-judged verdict layers
+    for r in res.records:
+        assert r.limit_layers == r.report.spec.dram_layers
+
+
+def test_registry_rejects_duplicates():
+    wd = registry.get("dmm")
+    with pytest.raises(ValueError, match="already registered"):
+        registry.register(wd)
+    with pytest.raises(ValueError, match="unknown workload"):
+        registry.get("nope")

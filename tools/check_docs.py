@@ -1,0 +1,86 @@
+"""Docs checks: intra-repo markdown links resolve; doc snippets execute.
+
+1. Scans every tracked ``*.md`` for inline links/images and verifies
+   that relative targets exist; for ``#fragment`` links (same-file or
+   cross-file) the target heading must exist, using GitHub's slug rules
+   (lowercase, drop punctuation, spaces → dashes).
+2. Runs ``doctest`` over the snippet-bearing docs (``docs/*.md``).
+
+Exit code 0 = all good.  Run:  PYTHONPATH=src python tools/check_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+DOCTEST_DOCS = sorted((ROOT / "docs").glob("*.md"))
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_CODE_FENCE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_]", "", h)
+    h = re.sub(r"[^\w\- ]", "", h)        # drop punctuation (unicode-aware)
+    return h.replace(" ", "-")
+
+
+def headings_of(path: Path) -> set[str]:
+    text = _CODE_FENCE.sub("", path.read_text())
+    return {github_slug(m.group(1)) for m in _HEADING.finditer(text)}
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in sorted(ROOT.rglob("*.md")):
+        if any(part.startswith(".") or part in ("node_modules",)
+               for part in md.relative_to(ROOT).parts):
+            continue
+        text = _CODE_FENCE.sub("", md.read_text())
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            if not dest.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+                continue
+            if frag and dest.suffix == ".md":
+                if github_slug(frag) not in headings_of(dest):
+                    errors.append(f"{md.relative_to(ROOT)}: missing "
+                                  f"anchor -> {target}")
+    return errors
+
+
+def run_doctests() -> int:
+    failures = 0
+    for doc in DOCTEST_DOCS:
+        print(f"doctest {doc.relative_to(ROOT)} ...", flush=True)
+        res = doctest.testfile(str(doc), module_relative=False,
+                               optionflags=doctest.NORMALIZE_WHITESPACE
+                               | doctest.ELLIPSIS)
+        print(f"  {res.attempted} examples, {res.failed} failures")
+        failures += res.failed
+    return failures
+
+
+def main() -> int:
+    errors = check_links()
+    for e in errors:
+        print(f"LINK ERROR: {e}")
+    failures = run_doctests()
+    if errors or failures:
+        return 1
+    print("docs OK: links resolve, doctests pass")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
