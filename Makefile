@@ -1,0 +1,28 @@
+# Developer entry points.  CI mirrors these targets; see README §CI.
+PY := PYTHONPATH=src python
+
+.PHONY: test bench bench-quick baseline check-bench lint
+
+test:
+	$(PY) -m pytest -x -q
+
+# full benchmark suite (writes BENCH_*.json next to the text tables)
+bench:
+	$(PY) -m benchmarks.run
+
+# the CI smoke lane: thermal (incl. 256^2 solver shoot-out), stack, sweep
+bench-quick:
+	$(PY) -m benchmarks.run --quick thermal stack sweep
+
+# refresh the committed perf baseline from a local quick run
+# (tolerances in benchmarks/baseline.json are preserved; only the
+#  recorded values move)
+baseline: bench-quick
+	python tools/check_bench.py --update
+
+check-bench:
+	python tools/check_bench.py
+
+lint:
+	ruff check .
+	ruff format --check tools/check_bench.py benchmarks/_record.py

@@ -1,0 +1,47 @@
+"""Machine-readable benchmark artifacts: ``BENCH_<name>.json``.
+
+Every benchmark main records flat scalar metrics next to its text table
+(``Recorder``), so CI can upload them as artifacts and
+``tools/check_bench.py`` can gate them against the committed
+``benchmarks/baseline.json`` with per-metric tolerances.  The JSON goes
+to ``$BENCH_JSON_DIR`` (default: the current directory) as
+
+    {"bench": <name>, "schema": 1, "metrics": {<name>: <number>, ...}}
+
+Metric values must be plain numbers (bools are stored as 0/1) — that is
+what keeps the regression gate a dumb, diffable comparison.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+
+def json_path(name: str) -> str:
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    return os.path.join(out_dir, f"BENCH_{name}.json")
+
+
+class Recorder:
+    """Collects metrics for one benchmark and writes its JSON artifact."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.t0 = time.time()
+        self.metrics: dict[str, float] = {}
+
+    def add(self, **metrics) -> None:
+        for key, value in metrics.items():
+            self.metrics[key] = float(value)
+
+    def finish(self) -> dict:
+        """Stamp wall-clock, write ``BENCH_<name>.json``, return metrics."""
+        self.metrics.setdefault("wall_s", time.time() - self.t0)
+        path = json_path(self.name)
+        payload = {"bench": self.name, "schema": 1, "metrics": self.metrics}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"[bench-json] wrote {path} ({len(self.metrics)} metrics)")
+        return self.metrics

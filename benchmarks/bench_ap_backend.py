@@ -9,18 +9,31 @@ fp32 MAC.  For MAC-dominated LM steps the v5e wins on raw throughput by
 orders of magnitude; the AP's regime is the memory-/collective-bound corner
 (decode) and, per the paper, the THERMAL envelope: W per result at equal
 area (see DESIGN.md §4)."""
+import argparse
 import json
 import pathlib
+
+try:                                    # python -m benchmarks.run ...
+    from benchmarks._record import Recorder
+except ImportError:                     # python benchmarks/bench_*.py
+    from _record import Recorder
 
 from repro.core import models as M
 
 ART = pathlib.Path("artifacts/dryrun/pod16x16")
 
 
-def main():
+def main(argv=None):
+    parser = argparse.ArgumentParser()   # "ap" is taken by the estimate
+    parser.add_argument("--quick", action="store_true",
+                        help="accepted for driver uniformity (no-op here)")
+    parser.parse_args(argv)
+    rec = Recorder("ap_backend")
     if not ART.exists():
         print("run the dry-run first")
-        return
+        rec.add(n_cells=0)
+        return rec.finish()
+    n_cells = 0
     print("arch,shape,tpu_bound_s,ap_seconds,ap_joules,tpu_advantage_x")
     for f in sorted(ART.glob("*.json")):
         r = json.loads(f.read_text())
@@ -32,6 +45,9 @@ def main():
         adv = ap["seconds"] / tpu_bound if tpu_bound > 0 else float("inf")
         print(f"{r['arch']},{r['shape']},{tpu_bound:.3e},"
               f"{ap['seconds']:.3e},{ap['joules']:.3e},{adv:.1e}")
+        n_cells += 1
+    rec.add(n_cells=n_cells)
+    return rec.finish()
 
 
 if __name__ == "__main__":

@@ -52,10 +52,24 @@ def rows():
     return out
 
 
-def main():
+def main(argv=None):
+    import argparse
+
+    try:                                # python -m benchmarks.run ...
+        from benchmarks._record import Recorder
+    except ImportError:                 # python benchmarks/bench_*.py
+        from _record import Recorder
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="accepted for driver uniformity (no-op here)")
+    ap.parse_args(argv)
+    rec = Recorder("cycles")
     print("name,cycles,reference")
     for name, cycles, ref in rows():
         print(f"{name},{cycles},{ref}")
+        rec.add(**{f"cycles_{name}": cycles})
+    return rec.finish()
 
 
 if __name__ == "__main__":

@@ -1,18 +1,30 @@
 """§Roofline deliverable: per-(arch x shape) terms from the dry-run
 artifacts (single-pod table + multi-pod check)."""
+import argparse
 import json
 import pathlib
+
+try:                                    # python -m benchmarks.run ...
+    from benchmarks._record import Recorder
+except ImportError:                     # python benchmarks/bench_*.py
+    from _record import Recorder
 
 ART = pathlib.Path("artifacts/dryrun")
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="accepted for driver uniformity (no-op here)")
+    ap.parse_args(argv)
+    rec = Recorder("roofline")
     d = ART / "pod16x16"
     if not d.exists():
         print("no dry-run artifacts found; run: "
               "PYTHONPATH=src python -m repro.launch.dryrun --arch all "
               "--shape all --mesh both")
-        return
+        rec.add(n_cells=0)
+        return rec.finish()
     print("arch,shape,compute_s,memory_s,collective_s,dominant,"
           "useful_flop_ratio,mem_GiB_per_dev")
     recs = [json.loads(f.read_text()) for f in sorted(d.glob("*.json"))]
@@ -25,6 +37,8 @@ def main():
               f"{r['memory']['peak_bytes_per_device'] / 2**30:.2f}")
     multi = sorted((ART / "pod2x16x16").glob("*.json"))
     print(f"multi-pod cells compiled: {len(multi)}")
+    rec.add(n_cells=len(recs), n_multi_pod_cells=len(multi))
+    return rec.finish()
 
 
 if __name__ == "__main__":

@@ -1,11 +1,23 @@
 """Paper Figs 6 & 7: speedup-vs-area and power-vs-area for BS/FFT/DMM,
 plus the same-performance design points and break-even areas."""
+import argparse
+
 import numpy as np
+
+try:                                    # python -m benchmarks.run ...
+    from benchmarks._record import Recorder
+except ImportError:                     # python benchmarks/bench_*.py
+    from _record import Recorder
 
 from repro.core import models as M
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="accepted for driver uniformity (no-op here)")
+    ap.parse_args(argv)
+    rec = Recorder("speedup_power")
     print("== Fig 6/7 curves (area sweep) ==")
     areas = np.geomspace(0.5, 100, 7)
     for name in M.WORKLOADS:
@@ -16,7 +28,9 @@ def main():
             print(f"  area={a:7.2f}mm2  S_simd={s_simd[i]:8.1f} "
                   f"S_ap={s_ap[i]:8.1f}  P_simd={p_simd[i]:7.3f}W "
                   f"P_ap={p_ap[i]:7.3f}W")
-        print(f"  break-even area = {M.break_even_area_mm2(name):.2f} mm^2")
+        be = M.break_even_area_mm2(name)
+        print(f"  break-even area = {be:.2f} mm^2")
+        rec.add(**{f"break_even_mm2_{name}": be})
 
     print("== same-performance design point (DMM, Fig 6/7 black dots) ==")
     dp = M.paper_design_point("dmm")
@@ -27,6 +41,9 @@ def main():
           f"{dp.simd_power_W:.2f} W")
     print(f"power ratio x{dp.power_ratio:.2f} (paper: >2); "
           f"power density ratio x{dp.power_density_ratio:.1f} (paper: ~25)")
+    rec.add(dmm_speedup=dp.speedup, dmm_power_ratio=dp.power_ratio,
+            dmm_power_density_ratio=dp.power_density_ratio)
+    return rec.finish()
 
 
 if __name__ == "__main__":

@@ -14,6 +14,11 @@ DRAM seconds above the 85 °C ceiling, and the final Picard residual.
 import argparse
 import sys
 
+try:                                    # python -m benchmarks.run ...
+    from benchmarks._record import Recorder
+except ImportError:                     # python benchmarks/bench_*.py
+    from _record import Recorder
+
 from repro.core.constants import DRAM_LIMIT_C
 from repro.stack import feedback
 from repro.sweep import SweepSpec, run_sweep
@@ -21,8 +26,8 @@ from repro.sweep import SweepSpec, run_sweep
 WORKLOADS = ("dmm", "fft", "bs")
 
 
-def sweep(dram_counts, grid_n: int, n_intervals: int, t_end: float,
-          steps_per_interval: int, n_cg: int) -> None:
+def sweep(rec: Recorder, dram_counts, grid_n: int, n_intervals: int,
+          t_end: float, steps_per_interval: int, n_cg: int) -> None:
     fb = feedback.FeedbackParams()
     spec = SweepSpec(workloads=WORKLOADS, sizes=(2 ** 20,),
                      n_dram=tuple(dram_counts), fb_modes=("closed",),
@@ -35,36 +40,51 @@ def sweep(dram_counts, grid_n: int, n_intervals: int, t_end: float,
     print("workload,machine,n_dram,logic_peak_C,dram_peak_C,dram_span_C,"
           "refresh_overhead_x,dtm_slowdown_x,dram_above_85C_s,"
           "picard_residual_C")
-    for rec in res.records:
-        r = rec.report
-        p = rec.point
+    for record in res.records:
+        r = record.report
+        p = record.point
         dram_span = r.span_C[:, list(r.spec.dram_layers)].max()
-        print(f"{p.workload},{rec.machine},{p.n_dram},"
+        print(f"{p.workload},{record.machine},{p.n_dram},"
               f"{r.logic_peak_C.max():.1f},{r.dram_peak_C.max():.1f},"
               f"{dram_span:.2f},{r.refresh_overhead:.3f},"
               f"{r.dtm_slowdown:.3f},{r.dram_time_above_limit_s:.3f},"
               f"{r.residual_C.max():.2g}")
-        assert r.converged, (rec.label, r.residual_C.max())
+        assert r.converged, (record.label, r.residual_C.max())
+    n_ok = 0
     for n_dram in dram_counts:
         for w in WORKLOADS:
-            ok = {rec.machine: rec.verdict_ok for rec in res.records
-                  if rec.point.workload == w and rec.point.n_dram == n_dram}
+            ok = {record.machine: record.verdict_ok
+                  for record in res.records
+                  if record.point.workload == w
+                  and record.point.n_dram == n_dram}
+            n_ok += ok["ap"] + ok["simd"]
             print(f"# {w} x{n_dram} DRAM ({DRAM_LIMIT_C:.0f}C ceiling): "
                   f"AP {'OK' if ok['ap'] else 'BLOCKED'} / "
                   f"SIMD {'OK' if ok['simd'] else 'BLOCKED'}")
+    rec.add(n_cases=len(res.records), n_ok=n_ok,
+            max_logic_peak_C=max(float(r.report.logic_peak_C.max())
+                                 for r in res.records),
+            max_dram_peak_C=max(float(r.report.dram_peak_C.max())
+                                for r in res.records),
+            max_refresh_overhead_x=max(r.report.refresh_overhead
+                                       for r in res.records),
+            max_dtm_slowdown_x=max(r.report.dtm_slowdown
+                                   for r in res.records))
 
 
-def main(argv=None) -> None:
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small grids/intervals (CI smoke lane)")
-    args = ap.parse_args(argv if argv is not None else [])
+    args = ap.parse_args(argv)
+    rec = Recorder("stack")
     if args.quick:
-        sweep(dram_counts=(1, 2), grid_n=12, n_intervals=16, t_end=0.25,
-              steps_per_interval=1, n_cg=30)
+        sweep(rec, dram_counts=(1, 2), grid_n=12, n_intervals=16,
+              t_end=0.25, steps_per_interval=1, n_cg=30)
     else:
-        sweep(dram_counts=(1, 2, 4), grid_n=24, n_intervals=48, t_end=0.25,
-              steps_per_interval=2, n_cg=40)
+        sweep(rec, dram_counts=(1, 2, 4), grid_n=24, n_intervals=48,
+              t_end=0.25, steps_per_interval=2, n_cg=40)
+    return rec.finish()
 
 
 if __name__ == "__main__":

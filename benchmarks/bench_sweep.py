@@ -11,48 +11,99 @@ invocation is served bit-identically from disk (the "cached:" line
 says which happened).
 
 ``--quick`` shrinks the grid for the CI smoke lane; ``--no-cache``
-forces a live replay.
+forces a live replay; ``--shards N`` partitions the case batch over N
+local devices (`shard_map`); ``--solver mg`` swaps the fixed-cost inner
+solve to multigrid V-cycles.  ``--cache-roundtrip`` is the CI cache
+check: run the sweep, then run it AGAIN and require the second pass to
+be served from disk — one invocation, explicit cold-run/warm-run
+semantics (exit 1 on a warm miss).  Metrics land in
+``BENCH_sweep.json``.
 """
 import argparse
 import sys
 import time
 
+try:                                    # python -m benchmarks.run ...
+    from benchmarks._record import Recorder
+except ImportError:                     # python benchmarks/bench_*.py
+    from _record import Recorder
+
 from repro.sweep import SweepSpec, run_sweep
 from repro.sweep import cache as sweep_cache
 
 
-def main(argv=None) -> None:
+def quick_spec(solver: str = "pcg") -> SweepSpec:
+    """The CI smoke-lane spec (also keys the CI .sweep_cache entry)."""
+    return SweepSpec(workloads=("sort", "hist"), sizes=(4096, 2 ** 20),
+                     n_dram=(2,), grid_n=8, n_intervals=8,
+                     steps_per_interval=1, n_cg=25, solver=solver)
+
+
+def full_spec(solver: str = "pcg") -> SweepSpec:
+    return SweepSpec(workloads=("dmm", "sort", "knn", "hist"),
+                     sizes=(2 ** 14, 2 ** 20), n_dram=(1, 2, 4),
+                     grid_n=12, n_intervals=16,
+                     steps_per_interval=1, n_cg=30, n_picard=20,
+                     solver=solver)
+
+
+def run_once(spec: SweepSpec, use_cache: bool, n_shards) -> tuple:
+    t0 = time.time()
+    res = run_sweep(spec, use_cache=use_cache, n_shards=n_shards)
+    dt = time.time() - t0
+    print(f"sweep: {spec.n_points} points x {len(spec.machines)} machines "
+          f"({', '.join(spec.workloads)}; sizes {list(spec.sizes)}; "
+          f"DRAM dies {list(spec.n_dram)}; solver {spec.solver}"
+          f"{f'; {n_shards} shards' if n_shards else ''}) in {dt:.1f}s")
+    print(f"cached: {'HIT (served from disk)' if res.from_cache else 'MISS'}"
+          f" key={spec.content_hash()} "
+          f"path={sweep_cache.path_for(spec)}")
+    return res, dt
+
+
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="2 workloads x 2 sizes x 1 stack (CI smoke lane)")
     ap.add_argument("--no-cache", action="store_true")
-    args = ap.parse_args(argv if argv is not None else [])
+    ap.add_argument("--shards", type=int, default=0,
+                    help="partition the case batch over N local devices")
+    ap.add_argument("--solver", default="pcg", choices=("pcg", "mg"),
+                    help="fixed-cost inner solve per implicit step")
+    ap.add_argument("--cache-roundtrip", action="store_true",
+                    help="run twice; the second pass MUST hit the disk "
+                         "cache (exit 1 otherwise)")
+    args = ap.parse_args(argv)
 
-    if args.quick:
-        spec = SweepSpec(workloads=("sort", "hist"), sizes=(4096, 2 ** 20),
-                         n_dram=(2,), grid_n=8, n_intervals=8,
-                         steps_per_interval=1, n_cg=25)
-    else:
-        spec = SweepSpec(workloads=("dmm", "sort", "knn", "hist"),
-                         sizes=(2 ** 14, 2 ** 20), n_dram=(1, 2, 4),
-                         grid_n=12, n_intervals=16,
-                         steps_per_interval=1, n_cg=30, n_picard=20)
+    if args.cache_roundtrip and args.no_cache:
+        raise SystemExit("--cache-roundtrip requires the cache")
+    spec = quick_spec(args.solver) if args.quick else full_spec(args.solver)
+    rec = Recorder("sweep")
+    n_shards = args.shards or None
 
-    t0 = time.time()
-    res = run_sweep(spec, use_cache=not args.no_cache)
-    dt = time.time() - t0
-    print(f"sweep: {spec.n_points} points x {len(spec.machines)} machines "
-          f"({', '.join(spec.workloads)}; sizes {list(spec.sizes)}; "
-          f"DRAM dies {list(spec.n_dram)}) in {dt:.1f}s")
-    print(f"cached: {'HIT (served from disk)' if res.from_cache else 'MISS'}"
-          f" key={spec.content_hash()} "
-          f"path={sweep_cache.path_for(spec)}")
+    res, dt = run_once(spec, not args.no_cache, n_shards)
+    rec.add(sweep_wall_s=dt, cold_from_cache=res.from_cache)
     print(res.table())
     for r in res.records:
         assert r.report.converged, (r.label, r.report.residual_C.max())
     n_ok = sum(r.verdict_ok for r in res.records)
     print(f"# {n_ok}/{len(res.records)} cases clear the 85C 3D-DRAM "
           f"ceiling")
+    rec.add(n_cases=len(res.records), n_ok=n_ok,
+            max_logic_peak_C=max(float(r.report.logic_peak_C.max())
+                                 for r in res.records),
+            max_dram_peak_C=max(float(r.report.dram_peak_C.max())
+                                for r in res.records))
+
+    if args.cache_roundtrip:
+        res2, dt2 = run_once(spec, True, n_shards)
+        rec.add(warm_wall_s=dt2, warm_from_cache=res2.from_cache)
+        if not res2.from_cache:
+            rec.finish()
+            raise SystemExit("cache-roundtrip FAILED: warm run was not "
+                             "served from disk")
+        print("# cache-roundtrip OK: warm run served from disk")
+    return rec.finish()
 
 
 if __name__ == "__main__":

@@ -2,32 +2,38 @@
 
 Paper §3.1 trio (dmm / fft / blackscholes) plus the suite additions
 (sort / spmv / knn / histogram); every row is an exact small instance
-checked against its NumPy oracle.
+checked against its NumPy oracle.  Per-workload cycles and max error
+land in ``BENCH_workloads.json``.
 """
+import argparse
+
 import numpy as np
+
+try:                                    # python -m benchmarks.run ...
+    from benchmarks._record import Recorder
+except ImportError:                     # python benchmarks/bench_*.py
+    from _record import Recorder
 
 from repro.workloads import blackscholes as bs
 from repro.workloads import dmm, fft, histogram, knn, sort, spmv
 
 
-def main():
+def rows():
     rng = np.random.default_rng(0)
-    print("workload,n,compute_cycles,energy_norm,max_err")
 
     A = rng.integers(0, 64, (8, 8), dtype=np.uint64)
     B = rng.integers(0, 64, (8, 8), dtype=np.uint64)
     C, ctr = dmm.ap_matmul(A, B, m=6)
     err = float(np.abs(C.astype(np.int64)
                        - dmm.reference(A, B).astype(np.int64)).max())
-    print(f"dmm,8x8,{ctr['mac_cycles']},{ctr['energy']:.3e},{err}")
+    yield "dmm", "8x8", ctr["mac_cycles"], ctr["energy"], err
 
     N = 16
     x = (rng.normal(size=N) + 1j * rng.normal(size=N)) * (0.4 / np.sqrt(N))
     X, ctr = fft.ap_fft(x, m=16, frac=12)
     rel = float(np.max(np.abs(X - fft.reference(x)))
                 / np.max(np.abs(fft.reference(x))))
-    print(f"fft,{N},{ctr['cycles'] - ctr['read_cycles']},"
-          f"{ctr['energy']:.3e},{rel:.4f}")
+    yield "fft", N, ctr["cycles"] - ctr["read_cycles"], ctr["energy"], rel
 
     n = 64
     S = rng.uniform(0.8, 1.6, n)
@@ -36,14 +42,14 @@ def main():
     sig = rng.uniform(0.15, 0.6, n)
     prices, ctr = bs.ap_blackscholes(S, K, T, sig)
     err = float(np.abs(prices - bs.reference(S, K, T, sig)).max())
-    print(f"blackscholes,{n},{ctr['cycles'] - ctr['read_cycles']},"
-          f"{ctr['energy']:.3e},{err:.4f}")
+    yield ("blackscholes", n, ctr["cycles"] - ctr["read_cycles"],
+           ctr["energy"], err)
 
     xs = rng.integers(0, 200, 64, dtype=np.uint64)
     ys, ctr = sort.ap_sort(xs, m=8)
     err = float(np.abs(ys.astype(np.int64)
                        - sort.reference(xs).astype(np.int64)).max())
-    print(f"sort,64,{ctr['cycles']},{ctr['energy']:.3e},{err}")
+    yield "sort", 64, ctr["cycles"], ctr["energy"], err
 
     n_rows, nnz = 8, 24
     r = rng.integers(0, n_rows, nnz)
@@ -52,19 +58,32 @@ def main():
     xv = rng.integers(0, 50, n_rows, dtype=np.uint64)
     y, ctr = spmv.ap_spmv(r, c, v, xv, n_rows, m=6)
     err = float(np.abs(y - spmv.reference(r, c, v, xv, n_rows)).max())
-    print(f"spmv,{nnz}nnz,{ctr['cycles']},{ctr['energy']:.3e},{err}")
+    yield "spmv", f"{nnz}nnz", ctr["cycles"], ctr["energy"], err
 
     db = rng.integers(0, 16, (64, 4), dtype=np.uint64)
     q = rng.integers(0, 16, 4, dtype=np.uint64)
     idx, ctr = knn.ap_knn(db, q, k=5, m=4)
     err = float(np.abs(idx - knn.reference(db, q, 5)).max())
-    print(f"knn,64x4,{ctr['cycles'] - ctr['read_cycles']},"
-          f"{ctr['energy']:.3e},{err}")
+    yield ("knn", "64x4", ctr["cycles"] - ctr["read_cycles"],
+           ctr["energy"], err)
 
     xs = rng.integers(0, 64, 128, dtype=np.uint64)
     h, ctr = histogram.ap_histogram(xs, 8, m=6)
     err = float(np.abs(h - histogram.reference(xs, 8, m=6)).max())
-    print(f"hist,128,{ctr['cycles']},{ctr['energy']:.3e},{err}")
+    yield "hist", 128, ctr["cycles"], ctr["energy"], err
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="accepted for driver uniformity (no-op here)")
+    ap.parse_args(argv)
+    rec = Recorder("workloads")
+    print("workload,n,compute_cycles,energy_norm,max_err")
+    for name, n, cycles, energy, err in rows():
+        print(f"{name},{n},{cycles},{energy:.3e},{err}")
+        rec.add(**{f"cycles_{name}": cycles, f"max_err_{name}": err})
+    return rec.finish()
 
 
 if __name__ == "__main__":

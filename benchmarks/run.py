@@ -1,5 +1,15 @@
 """Benchmark driver — one section per paper table/figure + the roofline
-deliverable.  ``PYTHONPATH=src python -m benchmarks.run [section ...]``"""
+deliverable.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [section ...]
+
+Every section's ``main(argv)`` records machine-readable metrics and
+writes ``BENCH_<name>.json`` next to its text table
+(``benchmarks/_record.py``); ``--quick`` forwards the CI smoke-lane
+flag to each section.  ``tools/check_bench.py`` gates the JSON
+artifacts against ``benchmarks/baseline.json``.
+"""
+import argparse
 import sys
 import time
 
@@ -13,8 +23,8 @@ SECTIONS = {
                       bench_speedup_power.main),
     "workloads": ("§3.1 workloads on the AP emulator",
                   bench_workloads.main),
-    "thermal": ("§4 thermal comparison (Figs 10/12/13)",
-                bench_thermal.main),
+    "thermal": ("§4 thermal comparison (Figs 10/12/13) + solver "
+                "shoot-out", bench_thermal.main),
     "stack": ("abstract claim: AP+DRAM vs SIMD+DRAM closed-loop "
               "stacks (refresh/leakage/DTM feedback)",
               bench_stack.main),
@@ -27,15 +37,22 @@ SECTIONS = {
 }
 
 
-def main() -> None:
-    wanted = sys.argv[1:] or list(SECTIONS)
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="forward the CI smoke-lane flag to every section")
+    ap.add_argument("sections", nargs="*", choices=[[]] + list(SECTIONS),
+                    help="sections to run (default: all)")
+    args = ap.parse_args(argv)
+    wanted = args.sections or list(SECTIONS)
+    section_argv = ["--quick"] if args.quick else []
     for name in wanted:
         title, fn = SECTIONS[name]
         print(f"\n===== {name}: {title} =====", flush=True)
         t0 = time.time()
-        fn()
+        fn(section_argv)
         print(f"----- {name} done in {time.time() - t0:.1f}s", flush=True)
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

@@ -10,10 +10,6 @@ prepended — still 4 passes per bit position.
 """
 from __future__ import annotations
 
-from typing import Sequence
-
-import numpy as np
-
 from repro.core.bitplane import Field
 from repro.core.engine import APEngine, PassSchedule
 from repro.core import isa

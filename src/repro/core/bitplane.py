@@ -18,8 +18,7 @@ The TAG register is a packed ``uint32[n_words // 32]`` vector.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial, reduce
-from typing import Sequence
+from functools import reduce
 
 import jax
 import jax.numpy as jnp

@@ -17,8 +17,6 @@ from __future__ import annotations
 import itertools
 from typing import Callable, Sequence
 
-import numpy as np
-
 from repro.core.bitplane import Field
 from repro.core.engine import APEngine, PassSchedule
 

@@ -41,16 +41,21 @@ import numpy as np
 
 from repro.core.constants import AMBIENT_C
 from repro.stack.spec import (PAPER_SPEC, PAPER_STACK, StackParams,
-                              StackSpec, spec_from_params,
-                              spreading_resistance as _spreading_resistance)
+                              StackSpec, spec_from_params)
 
 __all__ = [  # re-exports kept for callers of the pre-refactor module
     "AMBIENT_C", "PAPER_SPEC", "PAPER_STACK", "StackParams", "StackSpec",
     "spec_from_params", "Grid", "package_resistance", "steady_state",
+    "steady_state_stats", "SOLVERS",
     "apply_operator", "apply_operator_fields", "pcg", "pcg_fixed",
     "transient", "transient_solve", "explicit_dt", "transient_implicit",
     "transient_implicit_fields", "transient_solve_implicit",
 ]
+
+#: selectable linear-solver backends for the fields operator: Jacobi-PCG
+#: (the original), stand-alone geometric multigrid V-cycles, and
+#: V-cycle-preconditioned CG (see ``core/multigrid.py``, DESIGN.md §7.5)
+SOLVERS = ("pcg", "mg", "mgcg")
 
 
 def package_resistance(die_area_m2: float, p: StackParams = PAPER_STACK
@@ -252,16 +257,25 @@ def _diag(shape, g_lat, g_vert, g_pkg):
 # Pallas steady-state paths, and the implicit transient steppers below)
 # ---------------------------------------------------------------------------
 
-def pcg(A, Minv, b, tol=1e-8, max_iter=6000):
-    """Jacobi/diagonal-preconditioned CG for the SPD system A x = b.
+def _as_precond(Minv):
+    """Normalize a preconditioner to a closure: an inverse-diagonal
+    array (Jacobi) or a callable (e.g. one multigrid V-cycle)."""
+    return Minv if callable(Minv) else (lambda r: Minv * r)
 
-    ``A`` is a matvec closure, ``Minv`` the inverse diagonal (array).
-    Tolerance-based ``while_loop`` termination; see :func:`pcg_fixed` for the
-    fixed-cost variant used inside vmapped/scanned transient stepping.
+
+def pcg(A, Minv, b, tol=1e-8, max_iter=6000):
+    """Preconditioned CG for the SPD system A x = b.
+
+    ``A`` is a matvec closure; ``Minv`` is either the inverse diagonal
+    (array, Jacobi) or a callable applying any fixed SPD preconditioner
+    (``multigrid.v_cycle``).  Tolerance-based ``while_loop`` termination;
+    see :func:`pcg_fixed` for the fixed-cost variant used inside
+    vmapped/scanned transient stepping.  Returns ``(x, n_iterations)``.
     """
+    apply_Minv = _as_precond(Minv)
     x = jnp.zeros_like(b)
     r = b
-    z = Minv * r
+    z = apply_Minv(r)
     p = z
     rz = jnp.vdot(r, z)
     bnorm = jnp.linalg.norm(b)
@@ -276,14 +290,15 @@ def pcg(A, Minv, b, tol=1e-8, max_iter=6000):
         alpha = rz / jnp.vdot(p, Ap)
         x = x + alpha * p
         r = r - alpha * Ap
-        z = Minv * r
+        z = apply_Minv(r)
         rz_new = jnp.vdot(r, z)
         beta = rz_new / rz
         p = z + beta * p
         return x, r, p, rz_new, it + 1
 
-    x, r, *_ = jax.lax.while_loop(cond, body, (x, r, p, rz, jnp.int32(0)))
-    return x
+    x, r, p, rz, it = jax.lax.while_loop(
+        cond, body, (x, r, p, rz, jnp.int32(0)))
+    return x, it
 
 
 def pcg_fixed(A, Minv, b, n_iter: int):
@@ -294,9 +309,10 @@ def pcg_fixed(A, Minv, b, n_iter: int):
     right-hand side (alpha would be 0/0): the update is suppressed when the
     residual has already vanished.
     """
+    apply_Minv = _as_precond(Minv)
     x = jnp.zeros_like(b)
     r = b
-    z = Minv * r
+    z = apply_Minv(r)
     p = z
     rz = jnp.vdot(r, z)
 
@@ -308,7 +324,7 @@ def pcg_fixed(A, Minv, b, n_iter: int):
         alpha = jnp.where(ok, rz / jnp.where(ok, pAp, 1.0), 0.0)
         x = x + alpha * p
         r = r - alpha * Ap
-        z = Minv * r
+        z = apply_Minv(r)
         rz_new = jnp.vdot(r, z)
         beta = jnp.where(ok, rz_new / jnp.where(rz > 0, rz, 1.0), 0.0)
         p = z + beta * p
@@ -322,7 +338,7 @@ def pcg_fixed(A, Minv, b, n_iter: int):
 def _cg_solve(b, diag, g_lat, g_vert, g_pkg, tol=1e-8, max_iter=6000):
     """Jacobi-preconditioned conjugate gradient for G T = b."""
     A = lambda v: apply_operator(v, g_lat, g_vert, g_pkg)
-    return pcg(A, 1.0 / diag, b, tol, max_iter)
+    return pcg(A, 1.0 / diag, b, tol, max_iter)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -350,33 +366,82 @@ def _diag_fields(F: dict) -> jax.Array:
 
 
 @partial(jax.jit, static_argnames=("max_iter",))
-def _cg_solve_fields(b, F, tol=1e-8, max_iter=8000):
+def _cg_solve_fields_stats(b, F, tol=1e-8, max_iter=8000):
     A = lambda v: apply_operator_fields(v, F)
     return pcg(A, 1.0 / _diag_fields(F), b, tol, max_iter)
 
 
-def steady_state(power: np.ndarray | jax.Array, grid: Grid,
-                 t_amb: float = AMBIENT_C, use_pallas: bool = False
-                 ) -> jax.Array:
-    """Steady-state temperatures [C] of the DIE layers over the DIE.
+def _cg_solve_fields(b, F, tol=1e-8, max_iter=8000):
+    return _cg_solve_fields_stats(b, F, tol, max_iter)[0]
 
-    power: [n_die_layers, ny, nx] watts per cell of the die footprint (the
-    spreader layer and margin ring are handled internally and stripped).
+
+def _solve_fields(b, F, solver: str, use_pallas: bool, tol: float = 1e-8):
+    """Route one fields solve ``G dT = b`` to the selected backend.
+
+    Returns ``(dT, n_iterations)`` — CG iterations or V-cycles.  With
+    ``use_pallas`` the PCG backend runs the Pallas stencil matvec and
+    the multigrid backends run the Pallas red-black line smoother
+    (``kernels/mg_smooth``).
+    """
+    from repro.core import multigrid
+    if solver == "mg":
+        return multigrid.mg_solve_fields(b, F, 0.0, tol,
+                                         use_pallas=use_pallas)
+    if solver == "mgcg":
+        return multigrid.mgcg_solve_fields(b, F, 0.0, tol,
+                                           use_pallas=use_pallas)
+    if solver != "pcg":
+        raise ValueError(f"unknown solver {solver!r}; expected {SOLVERS}")
+    if use_pallas:
+        from repro.kernels.thermal_stencil import ops as _ops
+        return _ops.cg_solve_fields_stats(b, F, tol)
+    return _cg_solve_fields_stats(b, F, tol)
+
+
+def steady_state_stats(power: np.ndarray | jax.Array, grid: Grid,
+                       t_amb: float = AMBIENT_C, use_pallas: bool = False,
+                       solver: str = "pcg", tol: float = 1e-8
+                       ) -> tuple[jax.Array, dict]:
+    """:func:`steady_state` plus solver statistics.
+
+    Returns ``(T_die, stats)`` with ``stats = {"iterations", "solver",
+    "rel_residual"}``: ``iterations`` counts CG iterations (pcg/mgcg)
+    or V-cycles (mg), and ``rel_residual`` is the TRUE relative
+    residual ``||b - G x|| / ||b||`` recomputed after the solve — the
+    honest convergence signal (the mg backend in particular stops at
+    the float32 residual floor rather than the nominal ``tol``, and a
+    pathological hierarchy could stall earlier; callers can check
+    instead of trusting the iteration count).
     """
     F = grid.fields()
     power = grid.pad_power(power)
     m = grid.margin
     if m:
         power = jnp.pad(power, ((0, 0), (m, m), (m, m)))
-    if use_pallas:
-        from repro.kernels.thermal_stencil import ops as _ops
-        dT = _ops.cg_solve_fields(power, F)
-    else:
-        dT = _cg_solve_fields(power, F)
+    dT, iters = _solve_fields(power, F, solver, use_pallas, tol)
+    resid = jnp.linalg.norm(power - apply_operator_fields(dT, F)) \
+        / jnp.linalg.norm(power)
     n_die = grid.n_die_layers
     if m:
-        return dT[:n_die, m:m + grid.ny, m:m + grid.nx] + t_amb
-    return dT[:n_die] + t_amb
+        dT = dT[:n_die, m:m + grid.ny, m:m + grid.nx]
+    else:
+        dT = dT[:n_die]
+    return dT + t_amb, {"iterations": int(iters), "solver": solver,
+                        "rel_residual": float(resid)}
+
+
+def steady_state(power: np.ndarray | jax.Array, grid: Grid,
+                 t_amb: float = AMBIENT_C, use_pallas: bool = False,
+                 solver: str = "pcg") -> jax.Array:
+    """Steady-state temperatures [C] of the DIE layers over the DIE.
+
+    power: [n_die_layers, ny, nx] watts per cell of the die footprint (the
+    spreader layer and margin ring are handled internally and stripped).
+    ``solver`` selects the linear backend (:data:`SOLVERS`): Jacobi-PCG,
+    stand-alone multigrid V-cycles, or V-cycle-preconditioned CG.
+    """
+    T, _ = steady_state_stats(power, grid, t_amb, use_pallas, solver)
+    return T
 
 
 @partial(jax.jit, static_argnames=("n_steps",))
@@ -422,24 +487,51 @@ def explicit_dt(grid: Grid) -> float:
 # stepper (cosim.py replays per-interval power traces through it)
 # ---------------------------------------------------------------------------
 
-def _implicit_scan(dT0, power, A, Minv_lhs, cap3, dt, theta, n_steps: int,
-                   n_cg: int):
+def _implicit_scan(dT0, power, A, solve, n_steps: int):
     """theta-scheme steps in excess-temperature space  C dT/dt = P - G dT.
 
     Solves for the increment:  (C/dt + theta G) delta = P - G dT_n,  then
     dT_{n+1} = dT_n + delta  (exact for any theta; backward Euler theta=1,
-    Crank-Nicolson theta=0.5).  The LHS is SPD, solved by fixed-iteration
-    PCG so the whole integration is one scan — scannable and vmappable.
+    Crank-Nicolson theta=0.5).  The LHS is SPD; ``solve`` is a fixed-cost
+    closure for it (fixed-iteration PCG or fixed-cycle multigrid,
+    :func:`implicit_lhs_solver`) so the whole integration is one scan —
+    scannable and vmappable.
     """
-    lhs = lambda v: cap3 / dt * v + theta * A(v)
 
     def step(dTc, _):
         rhs = power - A(dTc)
-        delta = pcg_fixed(lhs, Minv_lhs, rhs, n_cg)
+        delta = solve(rhs)
         # emit the PRE-step max, matching the explicit transient()'s peaks
         return dTc + delta, jnp.max(dTc)
 
     return jax.lax.scan(step, dT0, None, length=n_steps)
+
+
+def implicit_lhs_solver(A, F, cap3, dt, theta, *, solver: str = "pcg",
+                        n_cg: int = 50, n_mg: int = 3,
+                        use_pallas: bool = False):
+    """Fixed-cost solve closure for the theta-scheme LHS
+    ``(C/dt + theta G) delta = rhs`` over the fields operator.
+
+    "pcg": ``n_cg`` Jacobi-PCG iterations on the closure ``A`` (which may
+    be the Pallas stencil).  "mg": ``n_mg`` V-cycles on the Galerkin
+    hierarchy of the theta-scaled fields — built ONCE here, outside any
+    scan, so coarse operators are constants of the compiled step.
+    """
+    lhs = lambda v: cap3 / dt * v + theta * A(v)
+    if solver == "mg":
+        from repro.core import multigrid
+        F_lhs = {k: theta * v for k, v in F.items()}
+        levels = multigrid.build_levels(F_lhs, cap3 / dt)
+        sweep_fn = multigrid._resolve_sweep(use_pallas)
+        coarse = multigrid.coarse_solve_fn(levels)
+        return lambda rhs: multigrid.iterate_fixed(
+            levels, rhs, n_mg, sweep_fn=sweep_fn, coarse_solve=coarse)
+    if solver != "pcg":
+        raise ValueError(f"unknown solver {solver!r}; expected "
+                         f"('pcg', 'mg')")
+    Minv = 1.0 / (cap3 / dt + theta * _diag_fields(F))
+    return lambda rhs: pcg_fixed(lhs, Minv, rhs, n_cg)
 
 
 @partial(jax.jit, static_argnames=("n_steps", "n_cg"))
@@ -451,39 +543,54 @@ def transient_implicit(T0, power, g_lat, g_vert, g_pkg, cap, dt,
     diag = _diag(T0.shape, g_lat, g_vert, g_pkg)
     cap3 = jnp.broadcast_to(jnp.asarray(cap, jnp.float32), (L,))[:, None, None]
     A = lambda v: apply_operator(v, g_lat, g_vert, g_pkg)
+    lhs = lambda v: cap3 / dt * v + theta * A(v)
     Minv = 1.0 / (cap3 / dt + theta * diag)
-    dT, peaks = _implicit_scan(T0 - t_amb, power, A, Minv, cap3, dt,
-                               theta, n_steps, n_cg)
+    solve = lambda rhs: pcg_fixed(lhs, Minv, rhs, n_cg)
+    dT, peaks = _implicit_scan(T0 - t_amb, power, A, solve, n_steps)
     return dT + t_amb, peaks + t_amb
 
 
-@partial(jax.jit, static_argnames=("n_steps", "n_cg"))
+@partial(jax.jit, static_argnames=("n_steps", "n_cg", "solver", "n_mg",
+                                   "use_pallas"))
 def transient_implicit_fields(T0, power, F: dict, cap3, dt, n_steps: int,
                               theta: float = 1.0, t_amb: float = AMBIENT_C,
-                              n_cg: int = 50):
+                              n_cg: int = 50, solver: str = "pcg",
+                              n_mg: int = 3, use_pallas: bool = False):
     """Implicit theta-scheme on the heterogeneous (production) operator.
 
     T0/power: [L, NY, NX] over the full (die + margin) domain; cap3 the
-    per-cell capacity field (``Grid.capacity_field()``).
+    per-cell capacity field (``Grid.capacity_field()``).  ``solver``
+    selects the fixed-cost inner solve: ``n_cg`` PCG iterations or
+    ``n_mg`` multigrid V-cycles per step.
     """
     A = lambda v: apply_operator_fields(v, F)
-    Minv = 1.0 / (cap3 / dt + theta * _diag_fields(F))
-    dT, peaks = _implicit_scan(T0 - t_amb, power, A, Minv, cap3, dt,
-                               theta, n_steps, n_cg)
+    solve = implicit_lhs_solver(A, F, cap3, dt, theta, solver=solver,
+                                n_cg=n_cg, n_mg=n_mg,
+                                use_pallas=use_pallas)
+    dT, peaks = _implicit_scan(T0 - t_amb, power, A, solve, n_steps)
     return dT + t_amb, peaks + t_amb
 
 
 def transient_solve_implicit(power, grid: Grid, t_end: float,
                              n_steps: int, theta: float = 1.0,
-                             t_amb: float = AMBIENT_C, n_cg: int = 50
+                             t_amb: float = AMBIENT_C, n_cg: int = 50,
+                             solver: str = "pcg", n_mg: int = 3
                              ) -> tuple[jax.Array, jax.Array]:
     """Implicit counterpart of :func:`transient_solve` with a chosen step
-    count (the point: n_steps can be 10-1000x below the explicit bound)."""
-    g = grid.conductances()
-    cap = grid.capacities()
+    count (the point: n_steps can be 10-1000x below the explicit bound).
+    ``solver="mg"`` runs the multigrid inner solve on the fields form of
+    the same stack."""
     power = grid.pad_power(power)
     dt = t_end / n_steps
     T0 = jnp.full(power.shape, t_amb, jnp.float32)
+    if solver == "mg":
+        F = grid.fields()
+        cap3 = grid.capacity_field()
+        return transient_implicit_fields(T0, power, F, cap3, dt, n_steps,
+                                         theta, t_amb, n_cg, solver="mg",
+                                         n_mg=n_mg)
+    g = grid.conductances()
+    cap = grid.capacities()
     return transient_implicit(T0, power, g["g_lat"], g["g_vert"],
                               g["g_pkg"], cap, dt, n_steps, theta, t_amb,
                               n_cg)

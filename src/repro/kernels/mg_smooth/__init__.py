@@ -1,0 +1,1 @@
+from repro.kernels.mg_smooth.ops import rb_line_sweep  # noqa: F401

@@ -1,0 +1,7 @@
+"""Pure-jnp oracle for the red-black z-line multigrid smoother.
+
+The reference *is* :func:`repro.core.multigrid.rb_line_sweep` — the
+smoother the V-cycle runs by default.  Re-export it so the kernel tests
+follow the standard kernels/<name>/{kernel,ops,ref} pattern.
+"""
+from repro.core.multigrid import rb_line_sweep  # noqa: F401

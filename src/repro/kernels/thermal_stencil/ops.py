@@ -10,7 +10,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.core.thermal import _vectors
 from repro.kernels.thermal_stencil import kernel as _kernel
@@ -37,14 +36,24 @@ def apply_operator_fields(T: jax.Array, F: dict, *, block_y: int = 32,
 
 @functools.partial(jax.jit, static_argnames=("max_iter", "block_y",
                                              "interpret"))
-def cg_solve_fields(b: jax.Array, F: dict, tol: float = 1e-8,
-                    max_iter: int = 8000, block_y: int = 32,
-                    interpret: bool = True) -> jax.Array:
-    """Jacobi-preconditioned CG on the heterogeneous Pallas stencil."""
+def cg_solve_fields_stats(b: jax.Array, F: dict, tol: float = 1e-8,
+                          max_iter: int = 8000, block_y: int = 32,
+                          interpret: bool = True):
+    """Jacobi-preconditioned CG on the heterogeneous Pallas stencil.
+
+    Returns ``(x, n_iterations)`` like :func:`repro.core.thermal.pcg`.
+    """
     from repro.core.thermal import _diag_fields, pcg
     A = lambda v: apply_operator_fields(v, F, block_y=block_y,
                                         interpret=interpret)
     return pcg(A, 1.0 / _diag_fields(F), b, tol, max_iter)
+
+
+def cg_solve_fields(b: jax.Array, F: dict, tol: float = 1e-8,
+                    max_iter: int = 8000, block_y: int = 32,
+                    interpret: bool = True) -> jax.Array:
+    return cg_solve_fields_stats(b, F, tol, max_iter, block_y,
+                                 interpret)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("max_iter", "block_y",
@@ -59,6 +68,6 @@ def cg_solve(b: jax.Array, diag: jax.Array, g_lat, g_vert, g_pkg,
     A = lambda v: _kernel.apply_operator_kernel(
         v, g_lat, gv_u, gv_d, g_pkg_vec, block_y=block_y,
         interpret=interpret)
-    return pcg(A, 1.0 / diag, b, tol, max_iter)
+    return pcg(A, 1.0 / diag, b, tol, max_iter)[0]
 
 

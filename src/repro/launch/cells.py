@@ -6,8 +6,6 @@ carries the hillclimbed settings for the three chosen cells (§Perf).
 """
 from __future__ import annotations
 
-import dataclasses
-
 from repro.configs import SHAPES, ArchConfig, ShapeCell, cell_is_runnable, \
     get_config, list_configs
 from repro.models.model import PerfConfig

@@ -22,7 +22,7 @@ bytes are reconstructed with the same multipliers.
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

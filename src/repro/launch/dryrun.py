@@ -21,7 +21,6 @@ import traceback
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
              force: bool = False, perf_override=None, tag: str = "") -> dict:
-    import jax
     from repro.configs import SHAPES, get_config
     from repro.launch import roofline as RF
     from repro.launch.cells import perf_for

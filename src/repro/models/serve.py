@@ -12,8 +12,7 @@ Decode contract: one new token per sequence, a shared scalar position
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

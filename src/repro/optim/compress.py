@@ -14,7 +14,6 @@ gradient exchange, where 4x fewer bytes is a direct win on the 'pod' axis).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

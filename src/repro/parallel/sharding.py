@@ -1,5 +1,6 @@
 """Parameter / cache PartitionSpec rules (DP+FSDP over 'data', TP/EP/SP over
-'model', 'pod' extending the data axis multi-pod).
+'model', 'pod' extending the data axis multi-pod) — plus the sweep-case
+batch sharding used by ``repro.sweep.engine`` (bottom of file).
 
 The scheme is Megatron-style 2D:
 
@@ -124,3 +125,67 @@ def to_named(mesh, spec_tree: Any) -> Any:
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# sweep-case batch sharding (the repro.sweep execution mode)
+# ---------------------------------------------------------------------------
+#
+# A sweep batch is embarrassingly parallel over its leading (case) axis:
+# every case is an independent closed-loop replay.  ``shard_case_batch``
+# wraps the vmapped replay in a ``shard_map`` over a 1D 'cases' mesh, so
+# each device runs the identical per-case program on its slice — results
+# are bitwise what the unsharded vmap produces, which is what keeps the
+# content-hashed sweep cache device-count-invariant
+# (tests/test_shard_sweep.py pins 1 shard vs N shards bit-equal).
+
+def sweep_mesh(n_shards: int | None = None):
+    """A 1D mesh of ``n_shards`` local devices over axis 'cases'.
+
+    ``None`` uses every local device.  Raises if more shards are
+    requested than devices exist (sharding is an execution detail; it
+    must never silently change what runs).
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else n_shards
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"n_shards={n} out of range for {len(devices)} local "
+            f"device(s)")
+    return Mesh(np.asarray(devices[:n]), ("cases",))
+
+
+def pad_case_batch(batch: Any, n_shards: int) -> tuple[Any, int]:
+    """Pad every leaf's leading axis to a multiple of ``n_shards`` by
+    repeating the last case (dropped again by :func:`unpad_case_batch`).
+    Returns ``(padded_batch, original_count)``."""
+    counts = {leaf.shape[0] for leaf in jax.tree_util.tree_leaves(batch)}
+    if len(counts) != 1:
+        raise ValueError(f"inconsistent case counts {sorted(counts)}")
+    (n,) = counts
+    pad = (-n) % n_shards
+    if pad == 0:
+        return batch, n
+    padded = jax.tree_util.tree_map(
+        lambda x: jnp.concatenate([x] + [x[-1:]] * pad, axis=0), batch)
+    return padded, n
+
+
+def unpad_case_batch(out: Any, n: int) -> Any:
+    """Drop the padding rows added by :func:`pad_case_batch`."""
+    return jax.tree_util.tree_map(lambda x: x[:n], out)
+
+
+def shard_case_batch(fn, mesh):
+    """``shard_map`` a batched-pytree function over the 'cases' axis.
+
+    ``fn`` must take ONE pytree whose leaves all carry the case axis
+    first, and return a pytree of case-major outputs; the leading axis
+    must already be a multiple of the mesh size (:func:`pad_case_batch`).
+    """
+    from jax.experimental.shard_map import shard_map
+    spec = P("cases")
+    return shard_map(fn, mesh=mesh, in_specs=spec, out_specs=spec,
+                     check_rep=False)

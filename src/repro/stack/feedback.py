@@ -83,15 +83,19 @@ class FeedbackParams:
 def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
                  interval_dt, theta, t_amb, *, fb: FeedbackParams,
                  steps_per_interval: int, n_cg: int, n_die: int,
-                 margin: int, die_n: int, use_pallas: bool):
+                 margin: int, die_n: int, use_pallas: bool,
+                 solver: str = "pcg", n_mg: int = 3):
     if use_pallas:
         from repro.kernels.thermal_stencil import ops as _ops
         A = lambda v: _ops.apply_operator_fields(v, F)
     else:
         A = lambda v: thermal.apply_operator_fields(v, F)
     dt = interval_dt / steps_per_interval
-    lhs = lambda v: cap3 / dt * v + theta * A(v)
-    Minv = 1.0 / (cap3 / dt + theta * thermal._diag_fields(F))
+    # fixed-cost inner solve for the theta-scheme LHS: n_cg PCG
+    # iterations or n_mg multigrid V-cycles (hierarchy built once, here)
+    solve = thermal.implicit_lhs_solver(A, F, cap3, dt, theta,
+                                        solver=solver, n_cg=n_cg,
+                                        n_mg=n_mg, use_pallas=use_pallas)
     lm3 = logic_mask[:, None, None]
 
     def interval(dTc, P_dyn):
@@ -116,7 +120,7 @@ def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
 
             def one(d, _):
                 rhs = P - A(d)
-                return d + thermal.pcg_fixed(lhs, Minv, rhs, n_cg), None
+                return d + solve(rhs), None
 
             dTn, _ = jax.lax.scan(one, dTc, None,
                                   length=steps_per_interval)
@@ -138,7 +142,7 @@ def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
 
 
 _STATIC = ("fb", "steps_per_interval", "n_cg", "n_die", "margin", "die_n",
-           "use_pallas")
+           "use_pallas", "solver", "n_mg")
 
 
 @partial(jax.jit, static_argnames=_STATIC)
@@ -147,13 +151,16 @@ def closed_loop_replay(dyn_frames, leak0, refresh0, logic_mask, F: dict,
                        t_amb: float = AMBIENT_C, *, fb: FeedbackParams,
                        die_n: int, n_die: int, steps_per_interval: int = 2,
                        n_cg: int = 40, margin: int = 0,
-                       use_pallas: bool = False):
+                       use_pallas: bool = False, solver: str = "pcg",
+                       n_mg: int = 3):
     """Replay one frame stack with temperature feedback.
 
     dyn_frames [T, L, NY, NX]: trace-modulated *dynamic* power (logic
     switching + DRAM activate/IO) — NO leakage or refresh baked in;
     leak0 / refresh0 [L, NY, NX]: leakage at ``fb.t_ref_C`` and 1× refresh
     power; logic_mask [L]: 1.0 on layers whose hot spot trips the DTM.
+    ``solver`` picks the fixed-cost inner solve: ``n_cg`` PCG iterations
+    ("pcg") or ``n_mg`` multigrid V-cycles ("mg").
 
     Returns (T_end [L,NY,NX], peak_C [T,n_die], min_C [T,n_die],
     residual_C [T], throttle [T], refresh_W [T], leak_W [T]).
@@ -162,7 +169,7 @@ def closed_loop_replay(dyn_frames, leak0, refresh0, logic_mask, F: dict,
                         interval_dt, theta, t_amb, fb=fb,
                         steps_per_interval=steps_per_interval, n_cg=n_cg,
                         n_die=n_die, margin=margin, die_n=die_n,
-                        use_pallas=use_pallas)
+                        use_pallas=use_pallas, solver=solver, n_mg=n_mg)
 
 
 @partial(jax.jit, static_argnames=_STATIC)
@@ -171,12 +178,13 @@ def closed_loop_batch(dyn_frames, leak0, refresh0, logic_mask, F: dict,
                       t_amb: float = AMBIENT_C, *, fb: FeedbackParams,
                       die_n: int, n_die: int, steps_per_interval: int = 2,
                       n_cg: int = 40, margin: int = 0,
-                      use_pallas: bool = False):
+                      use_pallas: bool = False, solver: str = "pcg",
+                      n_mg: int = 3):
     """vmapped closed-loop replay over a leading design-point batch."""
     fn = partial(_closed_loop, fb=fb,
                  steps_per_interval=steps_per_interval, n_cg=n_cg,
                  n_die=n_die, margin=margin, die_n=die_n,
-                 use_pallas=use_pallas)
+                 use_pallas=use_pallas, solver=solver, n_mg=n_mg)
     return jax.vmap(
         lambda fr, l0, r0, lm, Fb, cb: fn(fr, l0, r0, lm, Fb, cb,
                                           interval_dt, theta, t_amb)
@@ -334,28 +342,68 @@ def assemble_case(dp: M.DesignPoint, workload: str, machine: str,
     return dyn, l0, r0, lm, grid.fields(), grid.capacity_field()
 
 
+def closed_loop_sharded(dyn_frames, leak0, refresh0, logic_mask, F: dict,
+                        cap3, interval_dt, theta: float = 1.0,
+                        t_amb: float = AMBIENT_C, *, fb: FeedbackParams,
+                        die_n: int, n_die: int,
+                        steps_per_interval: int = 2, n_cg: int = 40,
+                        margin: int = 0, use_pallas: bool = False,
+                        solver: str = "pcg", n_mg: int = 3,
+                        n_shards: int | None = None):
+    """:func:`closed_loop_batch` partitioned over local devices.
+
+    The case batch is padded to a multiple of the mesh size (repeating
+    the last case; padding rows are dropped from every output) and run
+    through ``shard_map`` over a 1D 'cases' mesh
+    (``repro.parallel.sharding``).  Each device executes the identical
+    per-case program on its slice, so results are bitwise those of the
+    unsharded vmap for ANY device count — the property the sweep cache
+    relies on (tests/test_shard_sweep.py).
+    """
+    from repro.parallel import sharding as shardlib
+    mesh = shardlib.sweep_mesh(n_shards)
+    batch = (dyn_frames, leak0, refresh0, logic_mask, F, cap3)
+    batch, n_cases = shardlib.pad_case_batch(batch, mesh.shape["cases"])
+
+    def fn(tree):
+        return closed_loop_batch(
+            *tree, interval_dt, theta, t_amb, fb=fb, die_n=die_n,
+            n_die=n_die, steps_per_interval=steps_per_interval,
+            n_cg=n_cg, margin=margin, use_pallas=use_pallas,
+            solver=solver, n_mg=n_mg)
+
+    out = shardlib.shard_case_batch(fn, mesh)(batch)
+    return shardlib.unpad_case_batch(out, n_cases)
+
+
 def replay_cases(cases, spec: StackSpec, fb: FeedbackParams, grid_n: int,
                  interval_dt: float, *, theta: float = 1.0,
                  steps_per_interval: int = 2, n_cg: int = 40,
-                 margin: int | None = None, use_pallas: bool = False
-                 ) -> dict[str, "StackReport"]:
+                 margin: int | None = None, use_pallas: bool = False,
+                 solver: str = "pcg", n_mg: int = 3,
+                 n_shards: int | None = None) -> dict[str, "StackReport"]:
     """Replay pre-assembled cases as ONE vmapped closed-loop batch.
 
     ``cases``: sequence of (label, :func:`assemble_case` leaves) — every
     case must share the stack ``spec`` and grid shape.  Returns
     {label: StackReport}.  This is the single lowering both
     :func:`run_stack_cosim` and ``repro.sweep.engine`` go through.
+    ``n_shards`` routes through :func:`closed_loop_sharded` (0/None =
+    plain vmap on one device).
     """
     margin = grid_n // 4 if margin is None else margin
     labels = [label for label, _ in cases]
     dyns, leaks, refs, masks, Fs, caps = zip(*(leaves for _, leaves in cases))
     Fb = {k: jnp.stack([F[k] for F in Fs]) for k in Fs[0]}
-    _, peaks, mins, res, thr, ref_W, leak_W = closed_loop_batch(
+    replay = closed_loop_batch if not n_shards else partial(
+        closed_loop_sharded, n_shards=n_shards)
+    _, peaks, mins, res, thr, ref_W, leak_W = replay(
         jnp.asarray(np.stack(dyns)), jnp.asarray(np.stack(leaks)),
         jnp.asarray(np.stack(refs)), jnp.asarray(np.stack(masks)), Fb,
         jnp.stack(caps), interval_dt, theta, fb=fb, die_n=grid_n,
         n_die=spec.n_die_layers, steps_per_interval=steps_per_interval,
-        n_cg=n_cg, margin=margin, use_pallas=use_pallas)
+        n_cg=n_cg, margin=margin, use_pallas=use_pallas, solver=solver,
+        n_mg=n_mg)
     base_ref = dram.DRAMFloorplan(die_w_mm=1.0).base_refresh_W() \
         * len(spec.dram_layers)
     return {
@@ -378,7 +426,8 @@ def run_stack_cosim(workloads=("dmm", "fft", "bs"), n_dram: int = 2,
                     n_cg: int = 40, theta: float = 1.0,
                     fb: FeedbackParams = FeedbackParams(),
                     params: StackParams = PAPER_STACK,
-                    use_pallas: bool = False) -> dict:
+                    use_pallas: bool = False, solver: str = "pcg",
+                    n_mg: int = 3, n_shards: int | None = None) -> dict:
     """The paper's abstract claim, quantified: for each workload replay the
     AP and the same-performance SIMD under ``n_dram`` stacked DRAM dies
     with closed-loop refresh/leakage/DTM feedback, in ONE vmapped batch.
@@ -405,7 +454,8 @@ def run_stack_cosim(workloads=("dmm", "fft", "bs"), n_dram: int = 2,
     reports = replay_cases(cases, spec, fb, grid_n, interval_dt,
                            theta=theta,
                            steps_per_interval=steps_per_interval,
-                           n_cg=n_cg, margin=margin, use_pallas=use_pallas)
+                           n_cg=n_cg, margin=margin, use_pallas=use_pallas,
+                           solver=solver, n_mg=n_mg, n_shards=n_shards)
     out: dict = {"design_points": dps, "spec": spec,
                  "interval_s": interval_dt, "t_end": t_end, "fb": fb}
     for label, rep in reports.items():

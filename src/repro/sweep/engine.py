@@ -107,9 +107,11 @@ class SweepResult:
 # ---------------------------------------------------------------------------
 
 def _run_group(spec: SweepSpec, points: list[SweepPoint], n_dram: int,
-               fb_mode: str, params: StackParams
+               fb_mode: str, params: StackParams,
+               n_shards: int | None = None
                ) -> dict[tuple[SweepPoint, str], SweepRecord]:
-    """Replay one (n_dram, fb_mode) group as a single vmapped batch."""
+    """Replay one (n_dram, fb_mode) group as a single vmapped batch,
+    optionally partitioned over local devices (``n_shards``)."""
     stack_spec = dram_on_logic(n_dram, params)
     fb = resolve_fb(fb_mode, spec.n_picard)
     margin = spec.grid_n // 4
@@ -132,18 +134,27 @@ def _run_group(spec: SweepSpec, points: list[SweepPoint], n_dram: int,
     reports = feedback.replay_cases(
         cases, stack_spec, fb, spec.grid_n, interval_dt, theta=spec.theta,
         steps_per_interval=spec.steps_per_interval, n_cg=spec.n_cg,
-        margin=margin)
+        margin=margin, solver=spec.solver, n_mg=spec.n_mg,
+        n_shards=n_shards)
     return {(p, mc): SweepRecord(point=p, machine=mc,
                                  report=reports[f"{p.label}/{mc}"])
             for p, mc in keys}
 
 
 def run_sweep(spec: SweepSpec, cache_dir=None, use_cache: bool = True,
-              params: StackParams = PAPER_STACK) -> SweepResult:
+              params: StackParams = PAPER_STACK,
+              n_shards: int | None = None) -> SweepResult:
     """Run (or load) a sweep.  With ``use_cache`` the content-hashed
     on-disk entry is consulted first and written after a live run, so a
     second invocation of the same spec is served bit-identically from
-    disk."""
+    disk.
+
+    ``n_shards`` partitions every group's case batch over that many
+    local devices (``shard_map`` over a 'cases' mesh; None/0 = plain
+    single-device vmap).  It is an EXECUTION knob, not part of the
+    spec: per-case results are bitwise identical for any shard count,
+    so cache keys and cached artifacts do not depend on it.
+    """
     from repro.sweep import cache
     if params != PAPER_STACK:
         use_cache = False       # cache keys don't cover custom stack params
@@ -158,7 +169,8 @@ def run_sweep(spec: SweepSpec, cache_dir=None, use_cache: bool = True,
 
     results: dict[tuple[SweepPoint, str], SweepRecord] = {}
     for (n_dram, fb_mode), pts in sorted(by_group.items()):
-        results.update(_run_group(spec, pts, n_dram, fb_mode, params))
+        results.update(_run_group(spec, pts, n_dram, fb_mode, params,
+                                  n_shards))
 
     records = tuple(results[(p, mc)] for p in spec.points()
                     for mc in spec.machines)

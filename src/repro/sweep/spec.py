@@ -19,7 +19,13 @@ import json
 
 # Bump when the result schema or replay semantics change: a new schema
 # must never be served stale results from an old cache entry.
-CACHE_SCHEMA = 1
+# 2: solver/n_mg fields (selectable multigrid inner solve, ISSUE 4).
+CACHE_SCHEMA = 2
+
+#: inner-solver axis for the implicit replay steps (engine.py resolves
+#: it through ``thermal.implicit_lhs_solver``): fixed-iteration
+#: Jacobi-PCG or fixed-cycle geometric multigrid
+SOLVERS = ("pcg", "mg")
 
 #: feedback-mode axis -> FeedbackParams factory (resolved in engine.py)
 FB_MODES = ("closed", "nodtm", "open")
@@ -56,6 +62,11 @@ class SweepSpec:
     # the documented 0.05 °C/interval bar needs ~20 in the most violent
     # sweep regimes (refresh 4x + leakage much above trip) — "open" mode
     # keeps its own fixed count (FeedbackParams.disabled)
+    solver: str = "pcg"   # inner solve per implicit step (SOLVERS);
+    # results depend on it (different fixed-cost approximations), so it
+    # is part of the spec and the cache key — unlike the shard count,
+    # which is a pure execution detail and deliberately NOT a field
+    n_mg: int = 3         # V-cycles per step when solver == "mg"
 
     def __post_init__(self):
         from repro.workloads import registry
@@ -75,6 +86,11 @@ class SweepSpec:
             raise ValueError("n_dram must be >= 0")
         if self.n_picard < 1:
             raise ValueError("n_picard must be >= 1")
+        if self.solver not in SOLVERS:
+            raise ValueError(f"unknown solver {self.solver!r}; "
+                             f"expected one of {SOLVERS}")
+        if self.n_mg < 1:
+            raise ValueError("n_mg must be >= 1")
 
     # -------------------------------------------------------------- points
     def points(self) -> tuple[SweepPoint, ...]:

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import arith, isa
+from repro.core import arith
 from repro.core.engine import APEngine
 
 

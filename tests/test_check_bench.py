@@ -1,0 +1,109 @@
+"""The benchmark-JSON regression gate (tools/check_bench.py): passing
+baselines pass, synthetic regressions fail the run (the CI acceptance
+demonstration), and --update refreshes values without touching
+tolerances."""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_TOOLS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tools")
+
+
+@pytest.fixture(scope="module")
+def check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", os.path.join(_TOOLS, "check_bench.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _write(tmp_path, name, payload):
+    path = tmp_path / name
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+def _baseline(tmp_path, baseline):
+    return _write(tmp_path, "baseline.json", baseline)
+
+
+def _artifact(tmp_path, bench, metrics):
+    return _write(tmp_path, f"BENCH_{bench}.json",
+                  {"bench": bench, "schema": 1, "metrics": metrics})
+
+
+BASELINE = {
+    "thermal": {
+        "peak_C": {"value": 50.0, "abs_tol": 1.0},
+        "iters": {"value": 100, "rel_tol": 0.5},
+        "speedup": {"min": 2.0},
+        "maxdiff": {"max": 0.05},
+        "n_cases": {"value": 4},
+    }
+}
+
+GOOD = {"peak_C": 50.5, "iters": 120, "speedup": 30.0, "maxdiff": 1e-4,
+        "n_cases": 4}
+
+
+def test_passing_metrics_pass(check_bench, tmp_path):
+    b = _baseline(tmp_path, BASELINE)
+    a = _artifact(tmp_path, "thermal", GOOD)
+    assert check_bench.main([a, "--baseline", b]) == 0
+
+
+@pytest.mark.parametrize("bad", [
+    {"peak_C": 52.0},          # outside abs_tol
+    {"iters": 300},            # outside rel_tol
+    {"speedup": 0.8},          # regressed below the floor
+    {"maxdiff": 0.2},          # solver agreement broke
+    {"n_cases": 3},            # exact-count mismatch
+])
+def test_synthetic_regression_fails(check_bench, tmp_path, bad):
+    b = _baseline(tmp_path, BASELINE)
+    a = _artifact(tmp_path, "thermal", dict(GOOD, **bad))
+    assert check_bench.main([a, "--baseline", b]) == 1
+
+
+def test_missing_metric_fails(check_bench, tmp_path):
+    b = _baseline(tmp_path, BASELINE)
+    metrics = dict(GOOD)
+    del metrics["speedup"]
+    a = _artifact(tmp_path, "thermal", metrics)
+    assert check_bench.main([a, "--baseline", b]) == 1
+
+
+def test_missing_artifact_fails(check_bench, tmp_path):
+    b = _baseline(tmp_path, BASELINE)
+    a = _artifact(tmp_path, "other", GOOD)
+    assert check_bench.main([a, "--baseline", b]) == 1
+
+
+def test_update_refreshes_values_not_tolerances(check_bench, tmp_path):
+    b = _baseline(tmp_path, BASELINE)
+    a = _artifact(tmp_path, "thermal", GOOD)
+    assert check_bench.main([a, "--baseline", b, "--update"]) == 0
+    new = json.loads(open(b).read())
+    assert new["thermal"]["peak_C"] == {"value": 50.5, "abs_tol": 1.0}
+    assert new["thermal"]["iters"]["value"] == 120
+    assert new["thermal"]["speedup"] == {"min": 2.0}   # no value key
+    # and the refreshed baseline passes against the same artifact
+    assert check_bench.main([a, "--baseline", b]) == 0
+
+
+def test_repo_baseline_is_wellformed(check_bench):
+    """The committed baseline parses and only uses known rule keys."""
+    path = os.path.join(os.path.dirname(_TOOLS), "benchmarks",
+                        "baseline.json")
+    baseline = json.loads(open(path).read())
+    assert set(baseline) >= {"thermal", "stack", "sweep"}
+    for bench, metrics in baseline.items():
+        for name, expect in metrics.items():
+            assert set(expect) <= {"value", "abs_tol", "rel_tol", "min",
+                                   "max"}, (bench, name)
+    # the multigrid acceptance evidence is gated
+    assert "steady_mg_speedup_256" in baseline["thermal"]

@@ -65,7 +65,6 @@ def test_moe_groups_invariance_without_drops():
     """groups=1 vs groups=4 give identical outputs when capacity is ample
     (grouping only changes WHERE tokens sit in the dispatch buffer)."""
     from repro.configs import get_config
-    from repro.models import model as M
     from repro.models import moe as moe_mod
 
     cfg = get_config("deepseek-v2-lite-16b").reduced()

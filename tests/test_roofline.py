@@ -63,7 +63,6 @@ def test_roofline_terms_and_dominance():
 
 
 def test_model_flops_train_vs_decode():
-    import jax
     import jax.numpy as jnp
     from repro.configs import SHAPES, get_config
     from repro.launch.steps import params_sds

@@ -1,7 +1,6 @@
 """Runtime substrate: data determinism, checkpoint atomicity/restart,
 straggler monitor, gradient compression (single-device paths)."""
 import dataclasses
-import json
 
 import numpy as np
 import pytest

@@ -1,0 +1,155 @@
+"""CI perf-regression gate over the ``BENCH_*.json`` artifacts.
+
+Compares every metric listed in ``benchmarks/baseline.json`` against the
+value the corresponding ``BENCH_<bench>.json`` reports, with per-metric
+tolerances, and exits non-zero on any regression — a missing artifact or
+a missing metric is a failure too (a bench that silently stops emitting
+a gated number must not pass).
+
+Baseline format (per bench, per metric)::
+
+    {"thermal": {"steady_mg_speedup_256": {"value": 30.0, "min": 2.0},
+                 "ap_peak_C": {"value": 55.3, "abs_tol": 1.5},
+                 "steady_pcg_iters_256": {"value": 3832, "rel_tol": 0.5},
+                 "n_cases": {"value": 8}}}
+
+Rules (all that are present must hold; ``value`` alone means exact):
+
+- ``abs_tol``:  |new - value| <= abs_tol
+- ``rel_tol``:  |new - value| <= rel_tol * |value|
+- ``min`` / ``max``: absolute floor / ceiling on the new value (use for
+  ratios like speedups, where the baseline machine's absolute number is
+  meaningless on another machine)
+
+Usage::
+
+    python tools/check_bench.py [--baseline benchmarks/baseline.json]
+                                [--update] [BENCH_*.json ...]
+
+With no file arguments, ``BENCH_*.json`` in the current directory are
+used.  ``--update`` rewrites every baseline ``value`` from the current
+artifacts (tolerances are preserved) — the ``make baseline`` refresh
+path documented in the README.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = (
+    Path(__file__).resolve().parent.parent / "benchmarks" / "baseline.json"
+)
+
+
+def load_artifacts(paths: list[str]) -> dict[str, dict]:
+    """{bench name: metrics} from BENCH_*.json files."""
+    out: dict[str, dict] = {}
+    for p in paths:
+        with open(p) as f:
+            payload = json.load(f)
+        out[payload["bench"]] = payload["metrics"]
+    return out
+
+
+def check_metric(name: str, expect: dict, got: float) -> list[str]:
+    """Failure messages for one metric (empty = pass)."""
+    fails = []
+    value = expect.get("value")
+    bounded = not {"abs_tol", "rel_tol", "min", "max"}.isdisjoint(expect)
+    if value is not None:
+        abs_tol = expect.get("abs_tol")
+        rel_tol = expect.get("rel_tol")
+        if abs_tol is not None and abs(got - value) > abs_tol:
+            fails.append(f"|{got:g} - {value:g}| > abs_tol {abs_tol:g}")
+        if rel_tol is not None and abs(got - value) > rel_tol * abs(value):
+            fails.append(
+                f"|{got:g} - {value:g}| > rel_tol {rel_tol:g} * |{value:g}|"
+            )
+        if not bounded and got != value:
+            fails.append(f"{got:g} != {value:g} (exact)")
+    if "min" in expect and got < expect["min"]:
+        fails.append(f"{got:g} < min {expect['min']:g}")
+    if "max" in expect and got > expect["max"]:
+        fails.append(f"{got:g} > max {expect['max']:g}")
+    return fails
+
+
+def run_check(baseline: dict, artifacts: dict[str, dict]) -> int:
+    n_checked = n_failed = 0
+    for bench, metrics in sorted(baseline.items()):
+        got_metrics = artifacts.get(bench)
+        if got_metrics is None:
+            print(f"FAIL {bench}: no BENCH_{bench}.json artifact found")
+            n_failed += len(metrics)
+            n_checked += len(metrics)
+            continue
+        for name, expect in sorted(metrics.items()):
+            n_checked += 1
+            if name not in got_metrics:
+                print(f"FAIL {bench}.{name}: metric missing from artifact")
+                n_failed += 1
+                continue
+            fails = check_metric(name, expect, got_metrics[name])
+            if fails:
+                print(f"FAIL {bench}.{name}: {'; '.join(fails)}")
+                n_failed += 1
+            else:
+                print(f"  ok {bench}.{name} = {got_metrics[name]:g}")
+    print(f"{n_checked - n_failed}/{n_checked} gated metrics pass")
+    return 1 if n_failed else 0
+
+
+def run_update(
+    baseline_path: Path, baseline: dict, artifacts: dict[str, dict]
+) -> int:
+    for bench, metrics in baseline.items():
+        got_metrics = artifacts.get(bench)
+        if got_metrics is None:
+            print(f"skip {bench}: no artifact")
+            continue
+        for name, expect in metrics.items():
+            if name not in got_metrics:
+                print(f"skip {bench}.{name}: missing from artifact")
+                continue
+            if "value" in expect:
+                expect["value"] = got_metrics[name]
+    with open(baseline_path, "w") as f:
+        json.dump(baseline, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"updated {baseline_path}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "files",
+        nargs="*",
+        help="BENCH_*.json artifacts (default: ./BENCH_*.json)",
+    )
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE))
+    ap.add_argument(
+        "--update",
+        action="store_true",
+        help="rewrite baseline values from the artifacts",
+    )
+    args = ap.parse_args(argv)
+
+    files = args.files or sorted(glob.glob("BENCH_*.json"))
+    if not files:
+        print("no BENCH_*.json artifacts found")
+        return 1
+    artifacts = load_artifacts(files)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if args.update:
+        return run_update(Path(args.baseline), baseline, artifacts)
+    return run_check(baseline, artifacts)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
