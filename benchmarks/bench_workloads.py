@@ -1,11 +1,19 @@
-"""The workload suite executed on the AP emulator: cycles + accuracy.
+"""The workload suite executed on the AP emulator: cycles + accuracy
++ the device-resident scaling study.
 
 Paper §3.1 trio (dmm / fft / blackscholes) plus the suite additions
 (sort / spmv / knn / histogram); every row is an exact small instance
-checked against its NumPy oracle.  Per-workload cycles and max error
-land in ``BENCH_workloads.json``.
+checked against its NumPy oracle.  The scaling section times trace
+generation for the data-dependent workloads at n_elems in {64, 256,
+1024, 2048} on the device-resident path (steady-state: the jit cache is
+warmed first, as every driver's repeat instances see it) and measures
+the device-vs-eager speedup at n_elems=256 — the per-cycle host-sync
+oracle against the one-transfer-per-phase compiled programs.  Metrics
+land in ``BENCH_workloads.json``; ``benchmarks/baseline.json`` gates
+the speedups at >= 10x.
 """
 import argparse
+import time
 
 import numpy as np
 
@@ -15,7 +23,12 @@ except ImportError:                     # python benchmarks/bench_*.py
     from _record import Recorder
 
 from repro.workloads import blackscholes as bs
-from repro.workloads import dmm, fft, histogram, knn, sort, spmv
+from repro.workloads import dmm, fft, histogram, knn, registry, sort, spmv
+
+SCALING_WORKLOADS = ("sort", "knn", "hist", "spmv")
+SPEEDUP_WORKLOADS = ("sort", "knn", "hist")     # gated >= 10x at n=256
+SCALING_NS = (64, 256, 1024, 2048)
+QUICK_NS = (64, 256)
 
 
 def rows():
@@ -73,16 +86,62 @@ def rows():
     yield "hist", 128, ctr["cycles"], ctr["energy"], err
 
 
+def _timed(fn, repeats: int = 3) -> float:
+    """Best-of-N wall clock (the jit caches are already warm).
+
+    Best-of damps one-sided scheduler noise on loaded CI runners; the
+    gated speedup ratios keep ~2x margin over their 10x floor even for
+    the tightest workload (knn), so both sides get multiple samples.
+    """
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def scaling_rows(ns, rec: Recorder):
+    """Device-resident trace-generation scaling + eager-vs-device speedup.
+
+    Device timings are steady-state (one warm call first — repeat
+    instances of a workload shape share the compiled program); the
+    eager oracle has no compile step, so it is timed directly.
+    """
+    print("workload,n_elems,cycles,device_wall_s,cycles_per_s,"
+          "eager_wall_s,speedup")
+    for name in SCALING_WORKLOADS:
+        for n in ns:
+            ctr = registry.trace_counters(name, n)      # warm + compile
+            t_dev = _timed(lambda: registry.trace_counters(name, n))
+            cycles = int(ctr["cycles"])
+            rec.add(**{f"device_wall_s_{name}_{n}": t_dev,
+                       f"cycles_per_s_{name}_{n}": cycles / t_dev})
+            t_eager = speedup = None
+            if n == 256 and name in SPEEDUP_WORKLOADS:
+                t_eager = _timed(lambda: registry.trace_counters(
+                    name, n, mode="eager"), repeats=2)
+                speedup = t_eager / t_dev
+                rec.add(**{f"eager_wall_s_{name}_{n}": t_eager,
+                           f"speedup_{name}_{n}": speedup})
+            print(f"{name},{n},{cycles},{t_dev:.4f},{cycles / t_dev:.3e},"
+                  f"{'' if t_eager is None else f'{t_eager:.3f}'},"
+                  f"{'' if speedup is None else f'{speedup:.1f}'}")
+    rec.add(n_scaling_points=len(SCALING_WORKLOADS) * len(ns))
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="accepted for driver uniformity (no-op here)")
-    ap.parse_args(argv)
+                    help="scaling sizes {64, 256} only (CI smoke lane)")
+    args = ap.parse_args(argv)
     rec = Recorder("workloads")
     print("workload,n,compute_cycles,energy_norm,max_err")
     for name, n, cycles, energy, err in rows():
         print(f"{name},{n},{cycles},{energy:.3e},{err}")
         rec.add(**{f"cycles_{name}": cycles, f"max_err_{name}": err})
+    print("\n# device-resident scaling (speedup gated >= 10x at n=256)")
+    scaling_rows(QUICK_NS if args.quick else SCALING_NS, rec)
     return rec.finish()
 
 

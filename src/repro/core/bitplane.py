@@ -18,7 +18,7 @@ The TAG register is a packed ``uint32[n_words // 32]`` vector.
 from __future__ import annotations
 
 import dataclasses
-from functools import reduce
+from functools import partial, reduce
 
 import jax
 import jax.numpy as jnp
@@ -50,6 +50,10 @@ def pack_words(values: np.ndarray | jax.Array, n_bits: int) -> jax.Array:
     Bit ``i`` of word ``w`` lands in ``planes[i, w // 32]`` at lane-bit ``w % 32``.
     Host-side (numpy) so >32-bit fields work without jax_enable_x64.
     """
+    if n_bits > 64:
+        raise ValueError(
+            f"fields wider than 64 bits cannot be packed from uint64 host "
+            f"words (got width {n_bits}); split the value across fields")
     values = np.asarray(jax.device_get(values)).astype(np.uint64)
     n_words = values.shape[0]
     nl = n_lanes(n_words)
@@ -135,6 +139,14 @@ def broadcast_write(planes: jax.Array, cols: jax.Array, key: jax.Array) -> jax.A
 def write_column_bits(planes: jax.Array, col: int, bits: jax.Array) -> jax.Array:
     """Host-side load of a full per-word bit column (data load, not an AP op)."""
     return planes.at[col].set(bits)
+
+
+@partial(jax.jit, static_argnames=("start",))
+def set_field_planes(planes: jax.Array, sub: jax.Array,
+                     start: int) -> jax.Array:
+    """Store packed field planes ``sub`` at bit-column ``start`` (jitted:
+    an un-jitted scatter dispatch costs ~1 ms per field load on CPU)."""
+    return jax.lax.dynamic_update_slice(planes, sub, (start, 0))
 
 
 # ---------------------------------------------------------------------------

@@ -87,11 +87,16 @@ def trace_from_counters(counters: dict, n_intervals: int,
 
 def trace_elems(size: int) -> int:
     """Small-instance element count for a dataset size: sqrt(N) clamped
-    to [32, 256] — big enough to keep per-phase structure, small enough
-    that exact bit-serial emulation stays cheap.  The ONE sizing rule
-    shared by every driver (run_cosim, run_stack_cosim, repro.sweep) so
-    the same nominal scenario always replays the same trace."""
-    return int(min(max(math.sqrt(size), 32), 256))
+    to [32, 2048].  The lower bound keeps per-phase structure; the upper
+    bound used to be 256 because the eager engine's per-cycle host sync
+    made data-dependent instances dispatch-bound — with the
+    device-resident execution model (workloads/_device.py, one compiled
+    program + one transfer per phase) exact emulation stays cheap well
+    past 2048, and the clamp now only bounds compile time and trace
+    memory.  The ONE sizing rule shared by every driver (run_cosim,
+    run_stack_cosim, repro.sweep) so the same nominal scenario always
+    replays the same trace."""
+    return int(min(max(math.sqrt(size), 32), 2048))
 
 
 @functools.lru_cache(maxsize=None)

@@ -112,6 +112,8 @@ class PassSchedule:
 
     @staticmethod
     def concat(schedules: Sequence["PassSchedule"]) -> "PassSchedule":
+        if not schedules:
+            raise ValueError("empty schedule list")
         Kc = max(s.cmp_cols.shape[1] for s in schedules)
         Kw = max(s.w_cols.shape[1] for s in schedules)
 
@@ -134,10 +136,91 @@ class PassSchedule:
         )
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _run_schedule(planes: jax.Array, cmp_cols, cmp_key, w_cols, w_key):
-    """Execute a pass schedule; returns planes and per-pass matched counts."""
+# ---------------------------------------------------------------------------
+# functional core: APState + pure ops.  Device-resident workload programs
+# (workloads/_device.py) thread an APState through lax.scan / lax.while_loop
+# bodies so entire data-dependent inner loops run as ONE compiled program —
+# per-pass matched counts ride along as scan outputs and cross to the host
+# exactly once per workload phase.
+# ---------------------------------------------------------------------------
 
+#: APState.counters layout (int32): on-device totals mirroring the host
+#: counters an eager replay would accumulate (match = matched-row compare
+#: events).  Cross-checked against the host accounting in
+#: tests/test_device_workloads.py.
+CTR_CYCLES, CTR_COMPARE, CTR_WRITE, CTR_READ, CTR_MATCH = range(5)
+N_COUNTERS = 5
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("planes", "tag", "counters"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class APState:
+    """Functional snapshot of one AP array: a pytree that scans/vmaps.
+
+    ``counters`` is a packed int32[N_COUNTERS] accumulator updated on
+    device by the ``state_*`` ops, so a device-resident program carries
+    its cycle/event totals with it instead of syncing per cycle.
+    """
+    planes: jax.Array       # uint32[n_bits, n_lanes]
+    tag: jax.Array          # uint32[n_lanes]
+    counters: jax.Array     # int32[N_COUNTERS]
+
+
+def state_init(n_bits: int, n_words: int) -> APState:
+    return APState(bp.alloc_planes(n_bits, n_words),
+                   jnp.zeros(bp.n_lanes(n_words), jnp.uint32),
+                   jnp.zeros(N_COUNTERS, jnp.int32))
+
+
+def select_state(pred, a: APState, b: APState) -> APState:
+    """``a`` where pred else ``b`` — masks a whole op inside a scan body
+    (the device-program version of an eager host-side branch)."""
+    return jax.tree_util.tree_map(partial(jnp.where, pred), a, b)
+
+
+def state_compare(state: APState, cols, key,
+                  restrict_to_tag: bool = False) -> tuple[APState, jax.Array]:
+    """COMPARE: one cycle; returns (state', matched responder count)."""
+    tag = bp.compare(state.planes, cols, key,
+                     state.tag if restrict_to_tag else None)
+    matched = bp.popcount(tag)
+    ctr = state.counters.at[CTR_CYCLES].add(1).at[CTR_COMPARE].add(1) \
+        .at[CTR_MATCH].add(matched)
+    return APState(state.planes, tag, ctr), matched
+
+
+def state_write(state: APState, cols, key) -> tuple[APState, jax.Array]:
+    """WRITE into tagged rows: one cycle; returns (state', matched)."""
+    planes = bp.tagged_write(state.planes, state.tag, cols, key)
+    matched = bp.popcount(state.tag)
+    ctr = state.counters.at[CTR_CYCLES].add(1).at[CTR_WRITE].add(1)
+    return APState(planes, state.tag, ctr), matched
+
+
+def state_read_charge(state: APState, n_rows) -> APState:
+    """Charge ``n_rows`` sequential read cycles (read_tagged on device:
+    the data itself is already host-resident or rides the final ys)."""
+    ctr = state.counters.at[CTR_CYCLES].add(n_rows).at[CTR_READ].add(n_rows)
+    return APState(state.planes, state.tag, ctr)
+
+
+def state_run(state: APState, cmp_cols, cmp_key, w_cols,
+              w_key) -> tuple[APState, jax.Array]:
+    """Run a static pass table functionally; returns (state', matched[P]).
+
+    Mirrors :meth:`APEngine.run`: the TAG register is left untouched
+    (the fused scan keeps its per-pass tags internal).
+    """
+    planes, matched = _run_schedule_body(state.planes, cmp_cols, cmp_key,
+                                         w_cols, w_key)
+    P = cmp_cols.shape[0]
+    ctr = state.counters.at[CTR_CYCLES].add(2 * P).at[CTR_COMPARE].add(P) \
+        .at[CTR_WRITE].add(P).at[CTR_MATCH].add(matched.sum())
+    return APState(planes, state.tag, ctr), matched
+
+
+def _run_schedule_body(planes, cmp_cols, cmp_key, w_cols, w_key):
     def body(planes, xs):
         cc, ck, wc, wk = xs
         tag = bp.compare(planes, cc, ck)
@@ -145,8 +228,63 @@ def _run_schedule(planes: jax.Array, cmp_cols, cmp_key, w_cols, w_key):
         planes = bp.tagged_write(planes, tag, wc, wk)
         return planes, matched
 
-    planes, matched = jax.lax.scan(body, planes, (cmp_cols, cmp_key, w_cols, w_key))
-    return planes, matched
+    return jax.lax.scan(body, planes, (cmp_cols, cmp_key, w_cols, w_key))
+
+
+#: trace-time telemetry: how many times the jnp schedule runner has been
+#: traced (i.e. distinct shape buckets compiled).  Pinned by the
+#: retrace-count test — two schedules in one bucket must compile once.
+TRACE_STATS = {"run_schedule": 0}
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _run_schedule(planes: jax.Array, cmp_cols, cmp_key, w_cols, w_key):
+    """Execute a pass schedule; returns planes and per-pass matched counts."""
+    TRACE_STATS["run_schedule"] += 1       # increments at trace time only
+    return _run_schedule_body(planes, cmp_cols, cmp_key, w_cols, w_key)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (max(int(n), 1) - 1).bit_length()
+
+
+#: jitted broadcast write — the un-jitted scatter dispatch costs ~1 ms
+#: per call on CPU, which dominated field clears between fused schedules
+_broadcast_write_jit = jax.jit(bp.broadcast_write)
+
+
+def bucket_schedule(sched: "PassSchedule"
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Pad a schedule's (P, Kc, Kw) to power-of-two buckets so nearby
+    schedule shapes share one compiled program instead of retracing.
+
+    Extra key columns repeat column 0 — idempotent for both compare
+    (re-ANDing an identical XNOR term) and write (re-storing the same
+    value).  Extra passes are no-ops: compare column 0 against key 0,
+    then write 0 back into column 0 of the rows that matched — the
+    planes are unchanged whatever they hold.  Padded passes' matched
+    counts are sliced off before accounting, so they contribute zero
+    energy and zero events.
+    """
+    cc, ck, wc, wk = sched.cmp_cols, sched.cmp_key, sched.w_cols, sched.w_key
+    P, Kc = cc.shape
+    Kw = wc.shape[1]
+    Kc2, Kw2, P2 = _next_pow2(Kc), _next_pow2(Kw), _next_pow2(P)
+
+    def pad_cols(a, K2):
+        if a.shape[1] == K2:
+            return a
+        return np.concatenate(
+            [a, np.repeat(a[:, :1], K2 - a.shape[1], axis=1)], axis=1)
+
+    cc, ck = pad_cols(cc, Kc2), pad_cols(ck, Kc2)
+    wc, wk = pad_cols(wc, Kw2), pad_cols(wk, Kw2)
+    if P2 != P:
+        cc = np.concatenate([cc, np.zeros((P2 - P, Kc2), cc.dtype)])
+        ck = np.concatenate([ck, np.zeros((P2 - P, Kc2), ck.dtype)])
+        wc = np.concatenate([wc, np.zeros((P2 - P, Kw2), wc.dtype)])
+        wk = np.concatenate([wk, np.zeros((P2 - P, Kw2), wk.dtype)])
+    return cc, ck, wc, wk
 
 
 class APEngine:
@@ -191,16 +329,19 @@ class APEngine:
     # ------------------------------------------------------------- data I/O
     def load(self, field: Field, values) -> None:
         """Host-side load of per-word integer values into a field (not an AP op)."""
+        if field.width > 64:
+            raise ValueError(
+                f"cannot load a {field.width}-bit field from uint64 host "
+                f"words (max 64); split the value across fields")
         vals = np.asarray(values, np.uint64)
         if vals.shape != (self.n_words,):
             raise ValueError(f"expected ({self.n_words},), got {vals.shape}")
         sub = bp.pack_words(vals, field.width)
-        self.planes = self.planes.at[field.start:field.start + field.width].set(sub)
+        self.planes = bp.set_field_planes(self.planes, sub, field.start)
 
     def read(self, field: Field, signed: bool = False) -> np.ndarray:
         """Host-side readback of a field for all words (charges n read cycles)."""
-        self.read_cycles += self.n_words
-        self.cycles += self.n_words
+        self.charge_read(self.n_words)
         sub = self.planes[field.start:field.start + field.width]
         vals = np.asarray(bp.unpack_words(sub))
         if signed and field.width < 64:
@@ -221,8 +362,7 @@ class APEngine:
         host numpy, ordered by row index.
         """
         rows = np.where(np.asarray(bp.unpack_bits(self.tag)))[0]
-        self.read_cycles += len(rows)
-        self.cycles += len(rows)
+        self.charge_read(len(rows))
         sub = self.planes[field.start:field.start + field.width]
         vals = np.asarray(bp.unpack_words(sub))[rows]
         return rows, vals
@@ -230,64 +370,63 @@ class APEngine:
     # ------------------------------------------------------ silicon ops
     def compare(self, cols: Sequence[int], key: Sequence[int],
                 restrict_to_tag: bool = False) -> None:
-        """COMPARE: one cycle; TAG <- match(key @ cols) [& TAG]."""
+        """COMPARE: one cycle; TAG <- match(key @ cols) [& TAG].
+
+        Eager (per-cycle host sync when stats are on) — the oracle path.
+        Data-dependent inner loops should run device-resident instead
+        (``workloads/_device.py``) and replay through ``charge_*``.
+        """
         tag_in = self.tag if restrict_to_tag else None
         self.tag = bp.compare(self.planes, jnp.asarray(cols, jnp.int32),
                               jnp.asarray(key, jnp.uint32), tag_in)
-        self.cycles += 1
-        self.compare_cycles += 1
-        if self.collect_stats:
-            matched = int(bp.popcount(self.tag))
-            self._account_compare(len(cols), matched)
+        matched = int(bp.popcount(self.tag)) if self.collect_stats else 0
+        self.charge_compare(len(cols), matched)
 
     def write(self, cols: Sequence[int], key: Sequence[int]) -> None:
         """WRITE: one cycle; key -> masked cols of all TAGGED rows."""
         self.planes = bp.tagged_write(self.planes, self.tag,
                                       jnp.asarray(cols, jnp.int32),
                                       jnp.asarray(key, jnp.uint32))
-        self.cycles += 1
-        self.write_cycles += 1
-        if self.collect_stats:
-            matched = int(bp.popcount(self.tag))
-            self._account_write(len(cols), matched)
+        matched = int(bp.popcount(self.tag)) if self.collect_stats else 0
+        self.charge_write(len(cols), matched)
 
     def bwrite(self, cols: Sequence[int], key: Sequence[int]) -> None:
         """Broadcast write (all rows): one cycle."""
-        self.planes = bp.broadcast_write(self.planes, jnp.asarray(cols, jnp.int32),
-                                         jnp.asarray(key, jnp.uint32))
+        self.planes = _broadcast_write_jit(
+            self.planes, jnp.asarray(cols, jnp.int32),
+            jnp.asarray(key, jnp.uint32))
         self.cycles += 1
         self.bwrite_cycles += 1
         if self.collect_stats:
             self._account_write(len(cols), self.n_words)
 
-    def clear(self, field: Field) -> None:
-        self.bwrite(field.cols(), [0] * field.width)
+    # ----------------------------------------- accounting without executing
+    # Device-resident programs compute per-pass matched counts on device,
+    # transfer them ONCE per workload phase, and replay them through these
+    # chargers — producing cycle/energy/event/trace accounting bit-identical
+    # to the eager per-cycle path (tests/test_device_workloads.py).
 
-    def set_bits(self, field: Field, value: int) -> None:
-        """Broadcast an immediate constant into a field (1 cycle)."""
-        key = [(value >> i) & 1 for i in range(field.width)]
-        self.bwrite(field.cols(), key)
+    def charge_compare(self, k: int, matched: int) -> None:
+        """Account one COMPARE cycle (k active columns, matched rows)."""
+        self.cycles += 1
+        self.compare_cycles += 1
+        if self.collect_stats:
+            self._account_compare(int(k), int(matched))
 
-    def load_tag_column(self, col: int) -> None:
-        """TAG <- column ``col`` (a 1-column compare against key=1)."""
-        self.compare([col], [1])
+    def charge_write(self, k: int, matched: int) -> None:
+        """Account one tagged-WRITE cycle (k active columns, matched rows)."""
+        self.cycles += 1
+        self.write_cycles += 1
+        if self.collect_stats:
+            self._account_write(int(k), int(matched))
 
-    def tag_count(self) -> int:
-        return int(bp.popcount(self.tag))
+    def charge_read(self, n_rows: int) -> None:
+        """Account ``n_rows`` sequential read cycles (1 cycle/row, §2.1)."""
+        self.read_cycles += int(n_rows)
+        self.cycles += int(n_rows)
 
-    # ------------------------------------------------------ fused schedules
-    def run(self, sched: PassSchedule) -> None:
-        """Execute a static pass schedule as one fused scan on device."""
-        if self.backend == "pallas":
-            from repro.kernels.ap_match import ops as _ap_ops
-            self.planes, matched = _ap_ops.run_schedule(
-                self.planes, sched.cmp_cols, sched.cmp_key,
-                sched.w_cols, sched.w_key, backend="pallas")
-        else:
-            self.planes, matched = _run_schedule(
-                self.planes,
-                jnp.asarray(sched.cmp_cols), jnp.asarray(sched.cmp_key),
-                jnp.asarray(sched.w_cols), jnp.asarray(sched.w_key))
+    def charge_run(self, sched: PassSchedule, matched) -> None:
+        """Account a full pass schedule from its per-pass matched counts."""
         P = sched.n_passes
         self.cycles += 2 * P           # each pass = compare + write
         self.compare_cycles += P
@@ -309,6 +448,59 @@ class APEngine:
             self.events["mismatch"] += int(P) * n - int(m.sum())
             self.events["write"] += int((kw * mf).sum())
             self.events["miswrite"] += int((kw * (n - mf)).sum())
+
+    def clear(self, field: Field) -> None:
+        self.bwrite(field.cols(), [0] * field.width)
+
+    def set_bits(self, field: Field, value: int) -> None:
+        """Broadcast an immediate constant into a field (1 cycle)."""
+        key = [(value >> i) & 1 for i in range(field.width)]
+        self.bwrite(field.cols(), key)
+
+    def load_tag_column(self, col: int) -> None:
+        """TAG <- column ``col`` (a 1-column compare against key=1)."""
+        self.compare([col], [1])
+
+    def tag_count(self) -> int:
+        return int(bp.popcount(self.tag))
+
+    # ------------------------------------------------------ fused schedules
+    def run(self, sched: PassSchedule) -> None:
+        """Execute a static pass schedule as one fused scan on device.
+
+        The schedule shape is padded to a power-of-two bucket
+        (:func:`bucket_schedule`) so two schedules of nearby shapes share
+        one compiled program; the padded no-op passes' matched counts are
+        sliced off before accounting.
+        """
+        P = sched.n_passes
+        cc, ck, wc, wk = bucket_schedule(sched)
+        if self.backend == "pallas":
+            from repro.kernels.ap_match import ops as _ap_ops
+            self.planes, matched = _ap_ops.run_schedule(
+                self.planes, cc, ck, wc, wk, backend="pallas")
+        else:
+            self.planes, matched = _run_schedule(
+                self.planes, jnp.asarray(cc), jnp.asarray(ck),
+                jnp.asarray(wc), jnp.asarray(wk))
+        self.charge_run(sched, matched[:P])
+
+    # -------------------------------------------------- functional bridge
+    def state(self) -> APState:
+        """Snapshot (planes, tag, zeroed counters) for a device program."""
+        return APState(self.planes, self.tag,
+                       jnp.zeros(N_COUNTERS, jnp.int32))
+
+    def adopt(self, state: APState) -> None:
+        """Adopt a device program's final array state.
+
+        Counters are NOT folded in: the caller replays its per-pass
+        matched counts through the ``charge_*`` methods so energy/event/
+        trace accounting stays event-exact (the device-side
+        ``state.counters`` exist to cross-check those replays).
+        """
+        self.planes = state.planes
+        self.tag = state.tag
 
     # ------------------------------------------------------ energy helpers
     def _account_compare(self, k: int, matched: int) -> None:

@@ -20,7 +20,9 @@ import json
 # Bump when the result schema or replay semantics change: a new schema
 # must never be served stale results from an old cache entry.
 # 2: solver/n_mg fields (selectable multigrid inner solve, ISSUE 4).
-CACHE_SCHEMA = 2
+# 3: device-resident AP engine — trace_elems clamp 256 -> 2048 and
+#    instance-scaled histogram bins re-derive every workload trace.
+CACHE_SCHEMA = 3
 
 #: inner-solver axis for the implicit replay steps (engine.py resolves
 #: it through ``thermal.implicit_lhs_solver``): fixed-iteration

@@ -1,0 +1,222 @@
+"""Device-resident programs for the data-dependent workload inner loops.
+
+The eager :class:`~repro.core.engine.APEngine` path performs a blocking
+host sync (``int(bp.popcount(tag))``) after every compare/write cycle,
+so data-dependent workloads (sort, knn, spmv, hist) used to run
+thousands of sequential device round-trips.  The two programs here keep
+the whole inner loop resident (the CoMeT interval-simulation lesson,
+arXiv:2109.12405 applied at the engine layer):
+
+* :func:`min_extract_rounds` — the MSB-first CAM min-extraction idiom
+  shared by ``workloads/sort.py`` and ``workloads/knn.py``, compiled as
+  ONE ``lax.scan`` over extraction rounds.  The eager "did any candidate
+  respond?" branch becomes an on-device :func:`~repro.core.engine.select_state`;
+  rounds after the (data-dependent) termination point are masked no-ops.
+* :func:`count_probes` — a batch of response-counter COMPAREs (the
+  per-bin counting of ``histogram.py``, the per-(row, bit) tag-count
+  accumulation of ``spmv.py``) as one scanned program.
+
+Both transfer their per-pass matched counts to the host ONCE per
+workload phase and replay them through the engine's ``charge_*``
+accounting, which makes cycles / energy / events / trace arrays
+bit-identical to the eager per-cycle oracle
+(tests/test_device_workloads.py pins this for every workload).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplane as bp
+from repro.core import isa
+from repro.core import engine as E
+from repro.core.bitplane import Field
+from repro.core.engine import APEngine, PassSchedule, _next_pow2
+
+
+# ---------------------------------------------------------------------------
+# shared min-extraction scan (sort + knn)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MinExtractTrace:
+    """Per-round matched counts of one device min-extraction program.
+
+    Arrays are [rounds, ...]; narrowing axes run MSB -> LSB (the eager
+    iteration order).  ``masked[r]`` is True for rounds after the
+    data-dependent termination point (device no-ops the host never
+    replays).  ``device_counters`` are the program's own on-device
+    :data:`~repro.core.engine.APState` counter totals, cross-checked
+    against the host replay in the tests.
+    """
+    copy_sched: PassSchedule
+    copy_matched: np.ndarray   # [R, P_copy] per-pass counts of cand<-active
+    m1: np.ndarray             # [R, m] responders of the 0-probe compare
+    m2: np.ndarray             # [R, m] responders of the retire compare
+    take: np.ndarray           # [R, m] bool: the eager branch was taken
+    count: np.ndarray          # [R] tie-group size of the extracted min
+    tie_tag: np.ndarray        # [R, n_lanes] packed tie-group TAG
+    masked: np.ndarray         # [R] bool: round ran as a masked no-op
+    device_counters: np.ndarray  # int32[N_COUNTERS]
+
+
+@partial(jax.jit, static_argnames=("val_cols", "active_col", "cand_col",
+                                   "rounds", "readout"))
+def _min_extract_program(state, copy_cc, copy_ck, copy_wc, copy_wk,
+                         remaining, *, val_cols, active_col, cand_col,
+                         rounds, readout):
+    cand = jnp.array([cand_col], jnp.int32)
+    active = jnp.array([active_col], jnp.int32)
+    one = jnp.array([1], jnp.uint32)
+    zero = jnp.array([0], jnp.uint32)
+
+    def body(carry, _):
+        st0, done, rem = carry
+        st, copy_m = E.state_run(st0, copy_cc, copy_ck, copy_wc, copy_wk)
+        m1s, m2s, takes = [], [], []
+        for i in reversed(range(len(val_cols))):
+            cv = jnp.array([cand_col, val_cols[i]], jnp.int32)
+            st_c, m1 = E.state_compare(st, cv, jnp.array([1, 0], jnp.uint32))
+            # the eager branch: if any candidate has a 0 here, retire the
+            # 1-candidates — on device both arms run, one is selected
+            st_b, m2 = E.state_compare(st_c, cv, jnp.array([1, 1], jnp.uint32))
+            st_b, _ = E.state_write(st_b, cand, zero)
+            take = m1 > 0
+            st = E.select_state(take, st_b, st_c)
+            m1s.append(m1)
+            m2s.append(m2)
+            takes.append(take)
+        st, count = E.state_compare(st, cand, one)
+        tie_tag = st.tag
+        if readout:
+            # knn: sequential responder readout + re-compare + retire
+            st = E.state_read_charge(st, count)
+            st, _ = E.state_compare(st, cand, one)
+            st, _ = E.state_write(st, active, zero)
+        else:
+            # sort: retire the tie group unless the active set was empty
+            st_r, _ = E.state_write(st, active, zero)
+            st = E.select_state(count > 0, st_r, st)
+        new_rem = rem - count
+        st_out = E.select_state(done, st0, st)
+        rem_out = jnp.where(done, rem, new_rem)
+        done_out = done | (count == 0) | (new_rem <= 0)
+        ys = (copy_m, jnp.stack(m1s), jnp.stack(m2s), jnp.stack(takes),
+              count, tie_tag, done)
+        return (st_out, done_out, rem_out), ys
+
+    init = (state, jnp.bool_(False), jnp.asarray(remaining, jnp.int32))
+    (state, _, _), ys = jax.lax.scan(body, init, None, length=rounds)
+    return state, ys
+
+
+def min_extract_rounds(eng: APEngine, val: Field, active: Field, cand: Field,
+                       rounds: int, remaining: int,
+                       readout: bool = False) -> MinExtractTrace:
+    """Run up to ``rounds`` min-extractions over ``active`` rows on device.
+
+    One compiled program, one host transfer.  The engine adopts the final
+    array state; NO cycles/energy are charged here — the caller replays
+    the returned counts through :func:`replay_extract` + ``charge_*`` in
+    eager order.  ``remaining`` is the termination budget (elements left
+    to emit: n for sort, k for knn); ``readout`` adds knn's per-round
+    responder readout + re-compare + retire to the program.
+    """
+    copy_sched = isa.copy(cand, active)
+    state, ys = _min_extract_program(
+        eng.state(),
+        jnp.asarray(copy_sched.cmp_cols), jnp.asarray(copy_sched.cmp_key),
+        jnp.asarray(copy_sched.w_cols), jnp.asarray(copy_sched.w_key),
+        remaining,
+        val_cols=tuple(val.cols()), active_col=active.col(0),
+        cand_col=cand.col(0), rounds=rounds, readout=readout)
+    copy_m, m1, m2, take, count, tie_tag, masked = jax.device_get(ys)
+    ctr = np.asarray(jax.device_get(state.counters))
+    eng.adopt(state)
+    return MinExtractTrace(copy_sched, np.asarray(copy_m), np.asarray(m1),
+                           np.asarray(m2), np.asarray(take),
+                           np.asarray(count), np.asarray(tie_tag),
+                           np.asarray(masked), ctr)
+
+
+def replay_extract(eng: APEngine, tr: MinExtractTrace, r: int,
+                   m: int) -> tuple[int, int]:
+    """Charge round ``r``'s extraction events in eager order.
+
+    Mirrors ``sort.extract_min`` exactly: the fused candidate copy, the
+    MSB-first narrowing (second compare + retire write only where the
+    branch was taken), and the final tie-group compare.  Returns
+    (min_value, tie_count).
+    """
+    eng.charge_run(tr.copy_sched, tr.copy_matched[r])
+    v = 0
+    for pos, i in enumerate(reversed(range(m))):
+        eng.charge_compare(2, tr.m1[r, pos])
+        if tr.take[r, pos]:
+            eng.charge_compare(2, tr.m2[r, pos])
+            eng.charge_write(1, tr.m2[r, pos])
+        else:
+            v |= 1 << i
+    eng.charge_compare(1, tr.count[r])
+    return v, int(tr.count[r])
+
+
+def tagged_rows(tag_row: np.ndarray) -> np.ndarray:
+    """Row indices set in a packed TAG row (host-side unpack)."""
+    shifts = np.arange(bp.LANE, dtype=np.uint32)
+    bits = (np.asarray(tag_row, np.uint32)[:, None] >> shifts[None, :]) & 1
+    return np.where(bits.reshape(-1))[0]
+
+
+# ---------------------------------------------------------------------------
+# batched response counting (hist + spmv)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _count_probes_program(state, cols, keys, real):
+    def body(st0, xs):
+        cc, kk, is_real = xs
+        st, matched = E.state_compare(st0, cc, kk)
+        st = E.select_state(is_real, st, st0)
+        return st, matched
+
+    return jax.lax.scan(body, state, (cols, keys, real))
+
+
+def count_probes(eng: APEngine, cols, keys) -> np.ndarray:
+    """Run a batch of COMPAREs as one device program; return responder
+    counts [n_probes] (int64).
+
+    The probe shape is padded to power-of-two buckets (padded probes are
+    masked on device and sliced off here), so nearby probe batches share
+    one compiled program.  The engine adopts the final state — TAG holds
+    the LAST probe's responders, as after the eager loop — and every
+    probe's compare cycle is charged in order.
+    """
+    cols = np.atleast_2d(np.asarray(cols, np.int32))
+    keys = np.atleast_2d(np.asarray(keys, np.uint32))
+    n_probes, k = cols.shape
+    np2, k2 = _next_pow2(n_probes), _next_pow2(k)
+
+    def pad(a):
+        if k2 != k:
+            a = np.concatenate(
+                [a, np.repeat(a[:, :1], k2 - k, axis=1)], axis=1)
+        if np2 != n_probes:
+            a = np.concatenate(
+                [a, np.repeat(a[-1:], np2 - n_probes, axis=0)], axis=0)
+        return a
+
+    real = np.arange(np2) < n_probes
+    state, counts = _count_probes_program(
+        eng.state(), jnp.asarray(pad(cols)), jnp.asarray(pad(keys)),
+        jnp.asarray(real))
+    counts = np.asarray(jax.device_get(counts))[:n_probes].astype(np.int64)
+    eng.adopt(state)
+    for i in range(n_probes):
+        eng.charge_compare(k, counts[i])
+    return counts

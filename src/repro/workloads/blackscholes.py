@@ -14,6 +14,10 @@ values carried in the instruction stream.  Division is restoring long
 division, O(m^2).  Expected accuracy ~1e-2 absolute in price units
 (dominated by the Q6.10 quantization of PHI and ln) — tests assert against
 the float64 reference with that tolerance.
+
+The transcendental LUT schedules all land in one power-of-two shape
+bucket (`engine.bucket_schedule`), so the pricing pipeline compiles a
+few programs total instead of one per LUT.
 """
 from __future__ import annotations
 

@@ -11,6 +11,10 @@ The inner product is n sequential MACs, each word-parallel over all n^2 PUs:
 The "shift" between successive k terms is free — each MAC simply activates
 the bit-columns of the k-th resident operand pair (§2.2: "shift is
 implemented by activating different bit columns").
+
+The n per-term MAC schedules differ only in their operand columns, so
+the engine's shape-bucketed runner (`engine.bucket_schedule`) compiles
+ONE program for the whole sweep instead of retracing per schedule.
 """
 from __future__ import annotations
 

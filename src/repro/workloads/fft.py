@@ -20,6 +20,11 @@ Each of the log2(N) stages is:
 
 Total: O(m^2 log N) compute cycles — length-independent per stage, the
 core AP advantage the paper models with s_APU.
+
+Per-stage butterfly/twiddle schedules vary slightly in pass count and
+column fan-in; the engine's shape-bucketed runner
+(`engine.bucket_schedule`) folds them onto a handful of compiled
+programs instead of retracing per stage.
 """
 from __future__ import annotations
 

@@ -18,6 +18,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.engine import APEngine
+from repro.workloads import _device
 
 
 def plan_bits(m: int) -> int:
@@ -26,12 +27,17 @@ def plan_bits(m: int) -> int:
 
 
 def ap_histogram(x: np.ndarray, n_bins: int, m: int = 8,
-                 backend: str = "jnp") -> tuple[np.ndarray, dict]:
+                 backend: str = "jnp",
+                 mode: str = "device") -> tuple[np.ndarray, dict]:
     """Histogram of unsigned ``x`` (< 2^m) into ``n_bins`` equal bins.
 
     ``n_bins`` must be a power of two dividing 2^m.  Returns
-    (counts[n_bins], engine counters).  Exact.
+    (counts[n_bins], engine counters).  Exact.  ``mode="device"`` runs
+    all bin probes as one compiled program (one host transfer);
+    ``mode="eager"`` is the per-bin-sync oracle.
     """
+    if mode not in ("device", "eager"):
+        raise ValueError(f"unknown mode {mode!r}")
     x = np.asarray(x, np.uint64)
     n = x.shape[0]
     if (x >= (1 << m)).any():
@@ -54,9 +60,15 @@ def ap_histogram(x: np.ndarray, n_bins: int, m: int = 8,
 
     counts = np.zeros(n_bins, np.int64)
     cols = [val.col(i) for i in range(m - b, m)]   # top b columns
-    for k in range(n_bins):
-        eng.compare(cols, [(k >> i) & 1 for i in range(b)])
-        counts[k] = eng.tag_count()
+    keys = [[(k >> i) & 1 for i in range(b)] for k in range(n_bins)]
+    if mode == "device":
+        counts[:] = _device.count_probes(
+            eng, np.tile(np.asarray(cols, np.int32), (n_bins, 1)),
+            np.asarray(keys, np.uint32))
+    else:
+        for k in range(n_bins):
+            eng.compare(cols, keys[k])
+            counts[k] = eng.tag_count()
     counts[n_bins - 1] -= n_words - n              # remove padding rows
 
     counters = eng.counters()

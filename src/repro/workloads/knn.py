@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import isa
 from repro.core.engine import APEngine
+from repro.workloads import _device
 from repro.workloads.sort import extract_min
 
 
@@ -35,12 +36,18 @@ def plan_bits(d: int, m: int, n: int) -> int:
 
 
 def ap_knn(db: np.ndarray, q: np.ndarray, k: int, m: int = 4,
-           backend: str = "jnp") -> tuple[np.ndarray, dict]:
+           backend: str = "jnp", mode: str = "device"
+           ) -> tuple[np.ndarray, dict]:
     """Indices of the k nearest rows of ``db`` to ``q`` (L1, ascending).
 
     db: uint [n, d] with entries < 2^m; q: uint [d].  Returns
     (indices[k], engine counters).  Exact; ties by row order.
+    ``mode="device"`` runs the k min-extraction rounds (including the
+    responder readout) as one compiled program; ``mode="eager"`` is the
+    per-cycle oracle.
     """
+    if mode not in ("device", "eager"):
+        raise ValueError(f"unknown mode {mode!r}")
     db = np.asarray(db, np.uint64)
     q = np.asarray(q, np.uint64)
     n, d = db.shape
@@ -84,12 +91,27 @@ def ap_knn(db: np.ndarray, q: np.ndarray, k: int, m: int = 4,
 
     # k min-extractions; winners read out their index field
     out: list[int] = []
-    while len(out) < k:
-        _, count = extract_min(eng, acc, active, cand)
-        rows, ids = eng.read_tagged(idx)        # TAG = the tie group
-        out.extend(int(v) for v in ids[:k - len(out)])
-        eng.compare([cand.col(0)], [1])
-        eng.write([active.col(0)], [0])         # retire the whole group
+    if mode == "device":
+        idx_vals = pad(np.arange(n))            # idx field is never written
+        tr = _device.min_extract_rounds(eng, acc, active, cand, rounds=k,
+                                        remaining=k, readout=True)
+        r = 0
+        while len(out) < k:
+            _, count = _device.replay_extract(eng, tr, r, acc.width)
+            rows = _device.tagged_rows(tr.tie_tag[r])   # TAG = the tie group
+            eng.charge_read(len(rows))
+            ids = idx_vals[rows]
+            out.extend(int(v) for v in ids[:k - len(out)])
+            eng.charge_compare(1, count)
+            eng.charge_write(1, count)          # retire the whole group
+            r += 1
+    else:
+        while len(out) < k:
+            _, count = extract_min(eng, acc, active, cand)
+            rows, ids = eng.read_tagged(idx)    # TAG = the tie group
+            out.extend(int(v) for v in ids[:k - len(out)])
+            eng.compare([cand.col(0)], [1])
+            eng.write([active.col(0)], [0])     # retire the whole group
 
     counters = eng.counters()
     counters["trace_cycles"], counters["trace_energy"] = eng.trace_events()

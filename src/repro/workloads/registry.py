@@ -27,12 +27,16 @@ _REGISTRY: dict[str, "WorkloadDef"] = {}
 class WorkloadDef:
     """One registered workload.
 
-    ``run_small(n)`` executes an ~n-element instance and returns engine
-    counters with trace events; ``paper`` marks the original §3.1 trio.
+    ``run_small(n, mode)`` executes an ~n-element instance and returns
+    engine counters with trace events; ``paper`` marks the original
+    §3.1 trio.  ``mode`` selects device-resident execution ("device",
+    the default) or the per-cycle eager oracle ("eager") for the
+    data-dependent workloads — the schedule-driven trio is device-
+    resident either way and ignores it.
     """
     name: str
     title: str
-    run_small: Callable[[int], dict]
+    run_small: Callable[..., dict]
     paper: bool = False
 
     @property
@@ -62,9 +66,10 @@ def names() -> tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def trace_counters(name: str, n_elems: int = 64) -> dict:
+def trace_counters(name: str, n_elems: int = 64,
+                   mode: str = "device") -> dict:
     """Run the named workload's ~n_elems-element instance for its trace."""
-    return get(name).run_small(n_elems)
+    return get(name).run_small(n_elems, mode=mode)
 
 
 # ---------------------------------------------------------------------------
@@ -74,7 +79,7 @@ def trace_counters(name: str, n_elems: int = 64) -> dict:
 # time scales; only the shape matters).
 # ---------------------------------------------------------------------------
 
-def _run_dmm(n: int) -> dict:
+def _run_dmm(n: int, mode: str = "device") -> dict:
     rng = np.random.default_rng(0)
     from repro.workloads import dmm
     side = max(4, int(np.sqrt(n)) // 2 * 2)
@@ -84,7 +89,7 @@ def _run_dmm(n: int) -> dict:
     return ctr
 
 
-def _run_fft(n: int) -> dict:
+def _run_fft(n: int, mode: str = "device") -> dict:
     rng = np.random.default_rng(0)
     from repro.workloads import fft
     N = 1 << max(3, int(np.log2(max(n, 8))) // 2 + 2)
@@ -93,7 +98,7 @@ def _run_fft(n: int) -> dict:
     return ctr
 
 
-def _run_bs(n: int) -> dict:
+def _run_bs(n: int, mode: str = "device") -> dict:
     rng = np.random.default_rng(0)
     from repro.workloads import blackscholes as bs
     k = max(n, 32)
@@ -104,15 +109,15 @@ def _run_bs(n: int) -> dict:
     return ctr
 
 
-def _run_sort(n: int) -> dict:
+def _run_sort(n: int, mode: str = "device") -> dict:
     rng = np.random.default_rng(0)
     from repro.workloads import sort
     _, ctr = sort.ap_sort(rng.integers(0, 256, max(n, 32),
-                                       dtype=np.uint64), m=8)
+                                       dtype=np.uint64), m=8, mode=mode)
     return ctr
 
 
-def _run_spmv(n: int) -> dict:
+def _run_spmv(n: int, mode: str = "device") -> dict:
     rng = np.random.default_rng(0)
     from repro.workloads import spmv
     n_rows = max(8, int(np.sqrt(max(n, 16))))
@@ -121,25 +126,39 @@ def _run_spmv(n: int) -> dict:
     c = rng.integers(0, n_rows, nnz)
     v = rng.integers(0, 50, nnz, dtype=np.uint64)
     x = rng.integers(0, 50, n_rows, dtype=np.uint64)
-    _, ctr = spmv.ap_spmv(r, c, v, x, n_rows, m=6)
+    _, ctr = spmv.ap_spmv(r, c, v, x, n_rows, m=6, mode=mode)
     return ctr
 
 
-def _run_knn(n: int) -> dict:
+def _run_knn(n: int, mode: str = "device") -> dict:
     rng = np.random.default_rng(0)
     from repro.workloads import knn
     rows = max(n, 32)
+    # k scales with the database (capped) so the min-extraction phase
+    # keeps its per-round structure at larger trace instances instead
+    # of staying a fixed 5-round tail behind the LUT distance sweep
+    k = min(64, max(5, rows // 8))
     db = rng.integers(0, 16, (rows, 4), dtype=np.uint64)
     q = rng.integers(0, 16, 4, dtype=np.uint64)
-    _, ctr = knn.ap_knn(db, q, k=min(5, rows), m=4)
+    _, ctr = knn.ap_knn(db, q, k=min(k, rows), m=4, mode=mode)
     return ctr
 
 
-def _run_hist(n: int) -> dict:
+def hist_bins(n: int) -> int:
+    """Bin count for a histogram trace instance: more bins at larger
+    instances keep the per-bin activity structure (and the bin-probe
+    phase from degenerating to a handful of cycles), capped at one bin
+    per value (2^6 for the m=6 trace instances).  Power of two, as
+    ``ap_histogram`` requires."""
+    return 1 << int(np.log2(max(8, min(64, n // 4))))
+
+
+def _run_hist(n: int, mode: str = "device") -> dict:
     rng = np.random.default_rng(0)
     from repro.workloads import histogram
     _, ctr = histogram.ap_histogram(
-        rng.integers(0, 64, max(n, 32), dtype=np.uint64), n_bins=8, m=6)
+        rng.integers(0, 64, max(n, 32), dtype=np.uint64),
+        n_bins=hist_bins(n), m=6, mode=mode)
     return ctr
 
 

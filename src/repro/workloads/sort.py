@@ -13,6 +13,14 @@ decisions, and the whole tie group is retired at once, so the cost is
 
 the word-parallel advantage eq (7) models.  Energy flows through the
 engine's exact matched-row accounting like every other workload.
+
+Two execution modes, same bit-exact results and accounting:
+
+* ``mode="device"`` (default) — the whole extraction loop runs as ONE
+  compiled program (``_device.min_extract_rounds``), with the response-
+  counter branch as an on-device select and one host transfer total;
+* ``mode="eager"`` — the original per-cycle loop, kept as the oracle
+  (tests/test_device_workloads.py pins device == eager exactly).
 """
 from __future__ import annotations
 
@@ -21,6 +29,7 @@ import numpy as np
 from repro.core import isa
 from repro.core.bitplane import Field
 from repro.core.engine import APEngine
+from repro.workloads import _device
 
 
 def plan_bits(m: int) -> int:
@@ -50,12 +59,14 @@ def extract_min(eng: APEngine, val: Field, active: Field,
     return v, eng.tag_count()
 
 
-def ap_sort(x: np.ndarray, m: int = 8, backend: str = "jnp"
-            ) -> tuple[np.ndarray, dict]:
+def ap_sort(x: np.ndarray, m: int = 8, backend: str = "jnp",
+            mode: str = "device") -> tuple[np.ndarray, dict]:
     """Sort unsigned integers ``x`` (< 2^m) ascending on an n-PU AP.
 
     Returns (sorted array, engine counters).  Exact.
     """
+    if mode not in ("device", "eager"):
+        raise ValueError(f"unknown mode {mode!r}")
     x = np.asarray(x, np.uint64)
     n = x.shape[0]
     if (x >= (1 << m)).any():
@@ -75,12 +86,27 @@ def ap_sort(x: np.ndarray, m: int = 8, backend: str = "jnp"
     eng.load(active, mask)
 
     out: list[int] = []
-    while len(out) < n:
-        v, count = extract_min(eng, val, active, cand)
-        if count == 0:  # defensive: active set exhausted early
-            break
-        out.extend([v] * count)
-        eng.write([active.col(0)], [0])     # TAG still holds the tie group
+    if mode == "device":
+        # at most one extraction per distinct value; rounds past the
+        # data-dependent end run as masked no-ops on device
+        rounds = min(n, 1 << m)
+        tr = _device.min_extract_rounds(eng, val, active, cand, rounds,
+                                        remaining=n)
+        r = 0
+        while len(out) < n and r < rounds:
+            v, count = _device.replay_extract(eng, tr, r, m)
+            if count == 0:
+                break
+            out.extend([v] * count)
+            eng.charge_write(1, count)      # retire the tie group
+            r += 1
+    else:
+        while len(out) < n:
+            v, count = extract_min(eng, val, active, cand)
+            if count == 0:  # defensive: active set exhausted early
+                break
+            out.extend([v] * count)
+            eng.write([active.col(0)], [0])  # TAG still holds the tie group
 
     counters = eng.counters()
     counters["trace_cycles"], counters["trace_energy"] = eng.trace_events()

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.core import arith
 from repro.core.engine import APEngine
+from repro.workloads import _device
 
 
 def plan_bits(n_rows: int, m: int) -> int:
@@ -33,11 +34,16 @@ def plan_bits(n_rows: int, m: int) -> int:
 
 def ap_spmv(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
             x: np.ndarray, n_rows: int, m: int = 8,
-            backend: str = "jnp") -> tuple[np.ndarray, dict]:
+            backend: str = "jnp", mode: str = "device"
+            ) -> tuple[np.ndarray, dict]:
     """y = A @ x for A in COO form (rows, cols, vals); entries < 2^m.
 
     Returns (y[n_rows], engine counters).  Exact (integer).
+    ``mode="device"`` runs the whole per-(row, bit) tag-count reduction
+    as one compiled program; ``mode="eager"`` is the per-probe oracle.
     """
+    if mode not in ("device", "eager"):
+        raise ValueError(f"unknown mode {mode!r}")
     rows = np.asarray(rows, np.uint64)
     cols = np.asarray(cols, np.uint64)
     vals = np.asarray(vals, np.uint64)
@@ -72,11 +78,23 @@ def ap_spmv(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
 
     y = np.zeros(n_rows, np.int64)
     row_cols = row_f.cols()
-    for i in range(n_rows):
-        key = [(i >> b) & 1 for b in range(r_w)]
-        for b in range(2 * m):
-            eng.compare(row_cols + [prod.col(b)], key + [1])
-            y[i] += eng.tag_count() << b
+    if mode == "device":
+        probe_cols = np.asarray([row_cols + [prod.col(b)]
+                                 for i in range(n_rows)
+                                 for b in range(2 * m)], np.int32)
+        probe_keys = np.asarray([[(i >> rb) & 1 for rb in range(r_w)] + [1]
+                                 for i in range(n_rows)
+                                 for _ in range(2 * m)], np.uint32)
+        counts = _device.count_probes(eng, probe_cols, probe_keys)
+        for i in range(n_rows):
+            for b in range(2 * m):
+                y[i] += int(counts[i * 2 * m + b]) << b
+    else:
+        for i in range(n_rows):
+            key = [(i >> b) & 1 for b in range(r_w)]
+            for b in range(2 * m):
+                eng.compare(row_cols + [prod.col(b)], key + [1])
+                y[i] += eng.tag_count() << b
 
     counters = eng.counters()
     counters["trace_cycles"], counters["trace_energy"] = eng.trace_events()

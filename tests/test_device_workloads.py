@@ -1,0 +1,218 @@
+"""Device-resident execution vs the eager per-cycle oracle.
+
+The device programs (workloads/_device.py) must be *bit-identical* to
+the eager APEngine path — same values, same cycle counters, same energy
+float, same (cycle, energy) trace events — on both the jnp and Pallas
+schedule backends.  Plus: the shape-bucketed jit cache must not retrace
+for two schedules in one bucket, and the width-64 / empty-concat
+guards raise clearly.
+"""
+import numpy as np
+import pytest
+
+from repro.core import bitplane as bp
+from repro.core import engine as E
+from repro.core.engine import APEngine, PassSchedule
+from repro.workloads import _device
+from repro.workloads import histogram as hist
+from repro.workloads import knn, registry, sort, spmv
+
+BACKENDS = ("jnp", "pallas")
+
+
+def assert_counters_identical(ce: dict, cd: dict) -> None:
+    """Counters dicts equal bit-for-bit (ints ==, floats ==, arrays ==)."""
+    assert set(ce) == set(cd)
+    for k in ce:
+        if isinstance(ce[k], np.ndarray):
+            assert ce[k].dtype == cd[k].dtype, k
+            np.testing.assert_array_equal(ce[k], cd[k], err_msg=k)
+        else:
+            assert ce[k] == cd[k], (k, ce[k], cd[k])
+
+
+# ------------------------------------------------------- sort / knn / hist
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sort_device_matches_eager(backend):
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 200, 150, dtype=np.uint64)  # ties + 2 lane groups
+    ye, ce = sort.ap_sort(x, m=8, backend=backend, mode="eager")
+    yd, cd = sort.ap_sort(x, m=8, backend=backend, mode="device")
+    np.testing.assert_array_equal(ye, yd)
+    np.testing.assert_array_equal(yd, sort.reference(x))
+    assert_counters_identical(ce, cd)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_knn_device_matches_eager(backend):
+    rng = np.random.default_rng(1)
+    db = rng.integers(0, 16, (96, 4), dtype=np.uint64)
+    q = rng.integers(0, 16, 4, dtype=np.uint64)
+    ie, ce = knn.ap_knn(db, q, k=7, m=4, backend=backend, mode="eager")
+    idd, cd = knn.ap_knn(db, q, k=7, m=4, backend=backend, mode="device")
+    np.testing.assert_array_equal(ie, idd)
+    np.testing.assert_array_equal(idd, knn.reference(db, q, 7))
+    assert_counters_identical(ce, cd)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_hist_device_matches_eager(backend):
+    rng = np.random.default_rng(2)
+    x = rng.integers(0, 64, 300, dtype=np.uint64)
+    he, ce = hist.ap_histogram(x, 16, m=6, backend=backend, mode="eager")
+    hd, cd = hist.ap_histogram(x, 16, m=6, backend=backend, mode="device")
+    np.testing.assert_array_equal(he, hd)
+    np.testing.assert_array_equal(hd, hist.reference(x, 16, m=6))
+    assert_counters_identical(ce, cd)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_spmv_device_matches_eager(backend):
+    rng = np.random.default_rng(3)
+    n_rows, nnz = 10, 64
+    r = rng.integers(0, n_rows, nnz)
+    c = rng.integers(0, n_rows, nnz)
+    v = rng.integers(0, 50, nnz, dtype=np.uint64)
+    x = rng.integers(0, 50, n_rows, dtype=np.uint64)
+    ye, ce = spmv.ap_spmv(r, c, v, x, n_rows, m=6, backend=backend,
+                          mode="eager")
+    yd, cd = spmv.ap_spmv(r, c, v, x, n_rows, m=6, backend=backend,
+                          mode="device")
+    np.testing.assert_array_equal(ye, yd)
+    np.testing.assert_array_equal(yd, spmv.reference(r, c, v, x, n_rows))
+    assert_counters_identical(ce, cd)
+
+
+def test_registry_mode_roundtrip():
+    """trace_counters(mode=...) produces identical counters both ways for
+    every data-dependent suite workload (registry-level equivalence)."""
+    for name in ("sort", "knn", "hist", "spmv"):
+        cd = registry.trace_counters(name, 48, mode="device")
+        ce = registry.trace_counters(name, 48, mode="eager")
+        assert_counters_identical(ce, cd)
+
+
+def test_registry_equivalence_at_lifted_trace_clamp():
+    """The acceptance size: device == eager exactly at n_elems = 2048,
+    the new `cosim.trace_elems` ceiling (old clamp: 256)."""
+    from repro.core import cosim
+
+    assert cosim.trace_elems(2048 ** 2) == 2048
+    for name in ("sort", "knn", "hist", "spmv"):
+        cd = registry.trace_counters(name, 2048, mode="device")
+        ce = registry.trace_counters(name, 2048, mode="eager")
+        assert_counters_identical(ce, cd)
+
+
+def test_sort_device_handles_early_exhaustion_and_empty():
+    """count==0 break and n=0 behave like the eager loop."""
+    y, ctr = sort.ap_sort(np.zeros(0, np.uint64), m=4)
+    assert y.shape == (0,)
+    ye, ce = sort.ap_sort(np.array([7, 7, 7], np.uint64), m=3, mode="eager")
+    yd, cd = sort.ap_sort(np.array([7, 7, 7], np.uint64), m=3, mode="device")
+    np.testing.assert_array_equal(ye, yd)
+    assert_counters_identical(ce, cd)
+
+
+# ----------------------------------------- on-device counter accumulators
+def test_device_counters_cross_check_host_replay():
+    """The APState counters a min-extraction program accumulates on
+    device equal the host charge_* replay's counter deltas exactly."""
+    rng = np.random.default_rng(4)
+    x = rng.integers(0, 32, 64, dtype=np.uint64)
+    n = x.shape[0]
+    eng = APEngine(n_words=64, n_bits=sort.plan_bits(5))
+    val = eng.alloc.alloc(5, "val")
+    active = eng.alloc.alloc(1, "active")
+    cand = eng.alloc.alloc(1, "cand")
+    eng.load(val, x)
+    eng.load(active, np.ones(n, np.uint64))
+
+    before = eng.counters()
+    tr = _device.min_extract_rounds(eng, val, active, cand,
+                                    rounds=min(n, 32), remaining=n)
+    out: list[int] = []
+    r = 0
+    while len(out) < n:
+        v, count = _device.replay_extract(eng, tr, r, 5)
+        if count == 0:
+            break
+        out.extend([v] * count)
+        eng.charge_write(1, count)
+        r += 1
+    after = eng.counters()
+    np.testing.assert_array_equal(np.sort(x), np.asarray(out, np.uint64))
+
+    dc = tr.device_counters
+    assert dc[E.CTR_CYCLES] == after["cycles"] - before["cycles"]
+    assert dc[E.CTR_COMPARE] == (after["compare_cycles"]
+                                 - before["compare_cycles"])
+    assert dc[E.CTR_WRITE] == after["write_cycles"] - before["write_cycles"]
+    assert dc[E.CTR_READ] == after["read_cycles"] - before["read_cycles"]
+    assert dc[E.CTR_MATCH] == after["match"] - before["match"]
+    # masked rounds really were masked on device
+    assert tr.masked.sum() == tr.masked.shape[0] - r
+
+
+# --------------------------------------------------- shape-bucketed cache
+def test_same_bucket_compiles_once():
+    """Two schedules with different (P, Kc) in one power-of-two bucket
+    must share a single compiled program (no retrace)."""
+    def sched_of(n_passes, kc):
+        passes = [(list(range(kc)), [1] * kc, [kc], [0])
+                  for _ in range(n_passes)]
+        return PassSchedule.build(passes)
+
+    # unusual n_bits so no earlier test populated this plane shape
+    eng = APEngine(n_words=64, n_bits=23)
+    eng.run(sched_of(5, 3))                    # traces the (8, 4, 1) bucket
+    baseline = E.TRACE_STATS["run_schedule"]
+    eng.run(sched_of(7, 4))                    # same (8, 4, 1) bucket: hit
+    eng.run(sched_of(8, 2))                    # (8, 2, 1): a fresh bucket
+    assert E.TRACE_STATS["run_schedule"] == baseline + 1
+
+
+def test_bucketed_run_results_and_accounting_unpadded():
+    """Padding must not change results, cycles, or energy: a bucketed
+    run equals pass-by-pass eager execution of the same schedule."""
+    rng = np.random.default_rng(5)
+    x = rng.integers(0, 1 << 6, 64, dtype=np.uint64)
+    engs = []
+    for _ in range(2):
+        eng = APEngine(n_words=64, n_bits=8)
+        f = eng.alloc.alloc(6)
+        eng.load(f, x)
+        engs.append((eng, f))
+    (eng_run, f), (eng_eager, f2) = engs
+    passes = [([f.col(0), f.col(1)], [1, 0], [f.col(2)], [1]),
+              ([f.col(2), f.col(3), f.col(4)], [1, 1, 0], [f.col(5)], [0]),
+              ([f.col(5)], [0], [f.col(0), f.col(1)], [1, 1])]
+    sched = PassSchedule.build(passes)      # P=3, Kc=3, Kw=2 -> padded
+    eng_run.run(sched)
+    for cc, ck, wc, wk in passes:
+        eng_eager.compare(cc, ck)
+        eng_eager.write(wc, wk)
+    np.testing.assert_array_equal(eng_run.peek(f), eng_eager.peek(f2))
+    assert eng_run.energy == eng_eager.energy
+    assert eng_run.cycles == eng_eager.cycles
+    assert eng_run.events == eng_eager.events
+
+
+# ----------------------------------------------------------- guard rails
+def test_pack_words_rejects_width_over_64():
+    with pytest.raises(ValueError, match="64"):
+        bp.pack_words(np.zeros(32, np.uint64), 65)
+
+
+def test_engine_load_rejects_wide_field():
+    eng = APEngine(n_words=32, n_bits=80)
+    wide = eng.alloc.alloc(72, "wide")
+    with pytest.raises(ValueError, match="64"):
+        eng.load(wide, np.zeros(32, np.uint64))
+
+
+def test_concat_empty_schedule_list_raises():
+    with pytest.raises(ValueError, match="empty schedule list"):
+        PassSchedule.concat([])
+    with pytest.raises(ValueError, match="empty pass schedule"):
+        PassSchedule.build([])

@@ -10,6 +10,19 @@ from repro.core.engine import APEngine, PassSchedule
 from repro.kernels.ap_match import ops
 
 
+def _wide_planes(vals, n_bits):
+    """Planes of any width from uint64 words (bits >= 64 zero-filled).
+
+    ``bp.pack_words`` itself refuses widths > 64 (uint64 shift overflow
+    is UB); wide kernel shapes are built by explicit zero extension.
+    """
+    packed = bp.pack_words(vals, min(n_bits, 64))
+    if n_bits <= 64:
+        return packed
+    return jnp.concatenate(
+        [packed, jnp.zeros((n_bits - 64, packed.shape[1]), jnp.uint32)])
+
+
 def _random_schedule(rng, n_bits, n_passes, kc, kw):
     passes = []
     for _ in range(n_passes):
@@ -27,7 +40,7 @@ def test_random_schedule_matches_oracle(n_words, n_bits, block):
     rng = np.random.default_rng(n_words + n_bits)
     sched = _random_schedule(rng, n_bits, n_passes=12, kc=4, kw=3)
     vals = rng.integers(0, 1 << min(n_bits, 60), n_words, dtype=np.uint64)
-    planes = bp.pack_words(vals, n_bits)
+    planes = _wide_planes(vals, n_bits)
     p_ref, m_ref = ops.run_schedule(planes, sched.cmp_cols, sched.cmp_key,
                                     sched.w_cols, sched.w_key, backend="jnp")
     p_pl, m_pl = ops.run_schedule(planes, sched.cmp_cols, sched.cmp_key,
