@@ -1,0 +1,109 @@
+"""LLM-serving traffic → thermal interval co-simulation (docs/serving.md).
+
+Replays ≥1 h of request traffic against the AP and the
+same-performance SIMD 3D stacks for a grid of (model config × traffic
+shape) serving scenarios, through the adaptive-coarsening closed loop
+(`repro.serving`).  Prints the per-scenario SLA/thermal verdict table
+(offered QPS, p50/p99 latency under DTM, peak temperatures,
+time-above-85 °C, coarsening ratio) and one throughput-vs-throttle
+curve; the coarsening ratio is the gated headline — the adaptive plan
+must replay ≥5× fewer solver intervals than the uniform grid while the
+property-tested error bound (tests/test_coarsen_replay.py) holds.
+
+``--quick`` is the CI smoke lane: 2 configs × 2 traffic shapes over one
+simulated hour.  The full lane adds the constant-QPS shape and a second
+simulated hour.  Metrics land in ``BENCH_serving.json``.
+"""
+import argparse
+import sys
+import time
+
+try:                                    # python -m benchmarks.run ...
+    from benchmarks._record import Recorder
+except ImportError:                     # python benchmarks/bench_*.py
+    from _record import Recorder
+
+from repro.serving import ServingScenario, TrafficSpec, run_serving_cosim, \
+    verdict_table
+
+QUICK_CONFIGS = ("stablelm-1.6b", "deepseek-v2-lite-16b")
+QUICK_SHAPES = ("diurnal", "bursty")
+FULL_SHAPES = ("diurnal", "bursty", "constant")
+
+
+def scenarios(quick: bool) -> list[ServingScenario]:
+    configs = QUICK_CONFIGS
+    shapes = QUICK_SHAPES if quick else FULL_SHAPES
+    horizon = 3600.0 if quick else 7200.0
+    return [
+        ServingScenario(
+            config=config,
+            traffic=TrafficSpec(shape=shape, horizon_s=horizon),
+            load=0.7, grid_n=8, coarsen_tol=0.02, pad_quantum=64,
+            n_rounds=2 if quick else 3)
+        for config in configs for shape in shapes
+    ]
+
+
+def _key(scenario: ServingScenario, machine: str) -> str:
+    config = scenario.config.replace("-", "_").replace(".", "_")
+    return f"{config}_{scenario.traffic.shape}_{machine}"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 configs x 2 shapes x 1h (CI smoke lane)")
+    args = ap.parse_args(argv)
+
+    rec = Recorder("serving")
+    cases = scenarios(args.quick)
+    all_reports: dict[str, dict] = {}
+    ratios, ap_residuals, bounds = [], [], []
+    for sc in cases:
+        t0 = time.time()
+        reps = run_serving_cosim(sc)
+        dt = time.time() - t0
+        all_reports[sc.label] = reps
+        r0 = next(iter(reps.values()))
+        print(f"{sc.label}: {r0.mean_qps:.3f} qps offered over "
+              f"{sc.traffic.horizon_s:.0f}s -> {r0.n_coarse} coarse "
+              f"intervals from {r0.n_base} "
+              f"({r0.coarsen_ratio:.1f}x, bound "
+              f"{r0.error_bound_C:.2f}C) in {dt:.1f}s")
+        for machine, r in reps.items():
+            ratios.append(r.coarsen_ratio)
+            if machine == "ap":     # SIMD may flip a DTM boundary interval
+                ap_residuals.append(r.throttle_residual)
+            bounds.append(r.error_bound_C)
+            rec.add(**{
+                f"{_key(sc, machine)}_logic_peak_C":
+                    float(r.stack.logic_peak_C.max()),
+                f"{_key(sc, machine)}_dram_peak_C":
+                    float(r.stack.dram_peak_C.max()),
+                f"{_key(sc, machine)}_p99_s": r.p99_s,
+                f"{_key(sc, machine)}_dtm_x": r.dtm_slowdown,
+                f"{_key(sc, machine)}_above85_s": r.time_above(),
+            })
+
+    print()
+    print(verdict_table(all_reports))
+    first_ap = next(iter(all_reports.values()))["ap"]
+    centers, qps, secs = first_ap.throttle_curve()
+    print(f"\n# throughput-vs-throttle ({first_ap.label}):")
+    for c, q, s in zip(centers, qps, secs):
+        print(f"#   f={c:.3f}  served={q:.3f} qps  ({s:.0f}s)")
+
+    n_ap_ok = sum(r["ap"].verdict_ok for r in all_reports.values())
+    n_simd_ok = sum(r["simd"].verdict_ok for r in all_reports.values())
+    print(f"\n# AP clears the 85C DRAM ceiling in {n_ap_ok}/{len(cases)} "
+          f"scenarios; SIMD in {n_simd_ok}/{len(cases)}")
+    rec.add(n_cases=len(cases), n_ap_ok=n_ap_ok, n_simd_ok=n_simd_ok,
+            min_coarsen_x=min(ratios),
+            max_ap_throttle_residual=max(ap_residuals),
+            max_error_bound_C=max(bounds))
+    return rec.finish()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

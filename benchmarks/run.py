@@ -14,8 +14,8 @@ import sys
 import time
 
 from benchmarks import (bench_ap_backend, bench_cycles, bench_roofline,
-                        bench_speedup_power, bench_stack, bench_sweep,
-                        bench_thermal, bench_workloads)
+                        bench_serving, bench_speedup_power, bench_stack,
+                        bench_sweep, bench_thermal, bench_workloads)
 
 SECTIONS = {
     "cycles": ("§2.2 cycle-count claims", bench_cycles.main),
@@ -30,6 +30,8 @@ SECTIONS = {
               bench_stack.main),
     "sweep": ("scenario sweep: workloads x sizes x stacks through the "
               "cached vmapped path", bench_sweep.main),
+    "serving": ("LLM-serving traffic -> thermal co-simulation "
+                "(SLA + coarsening headline)", bench_serving.main),
     "roofline": ("§Roofline per-cell terms (dry-run artifacts)",
                  bench_roofline.main),
     "ap_backend": ("paper-technique x assigned archs (AP vs TPU)",

@@ -160,6 +160,148 @@ def power_frames(trace: PowerTrace, pmap: np.ndarray, leak_W: float,
 
 
 # ---------------------------------------------------------------------------
+# adaptive interval coarsening (multi-hour serving horizons)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CoarsePlan:
+    """A merge of consecutive base intervals into variable-length coarse
+    intervals: ``reps[i]`` base intervals fold into coarse interval i.
+
+    Built by :func:`coarsen_plan` so that the activity range inside each
+    run is bounded by the plan's tolerance; the merged power is the run
+    MEAN, which conserves energy exactly (equal-length base intervals).
+    The replay consumes ``dt_scale`` as the per-interval step multiplier
+    (``stack.feedback.closed_loop_replay(..., dt_scale=...)``).
+    """
+    reps: np.ndarray            # [Tc] int, each >= 1, sum == n_base
+
+    def __post_init__(self):
+        reps = np.asarray(self.reps, np.int64)
+        if reps.ndim != 1 or reps.size == 0 or (reps < 1).any():
+            raise ValueError("reps must be a non-empty 1-D array of "
+                             "positive run lengths")
+        object.__setattr__(self, "reps", reps)
+
+    @property
+    def n_coarse(self) -> int:
+        return int(self.reps.size)
+
+    @property
+    def n_base(self) -> int:
+        return int(self.reps.sum())
+
+    @property
+    def ratio(self) -> float:
+        """Solver-interval saving vs uniform stepping (>= 1)."""
+        return self.n_base / self.n_coarse
+
+    def dt_scale(self) -> np.ndarray:
+        """Per-coarse-interval duration in units of the base interval."""
+        return self.reps.astype(np.float32)
+
+    def _edges(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.reps)])
+
+    def merge(self, x: np.ndarray) -> np.ndarray:
+        """Mean of ``x`` (leading axis = base intervals) over each run —
+        the energy-conserving lowering of a base-resolution signal."""
+        x = np.asarray(x)
+        if x.shape[0] != self.n_base:
+            raise ValueError(f"signal has {x.shape[0]} base intervals, "
+                             f"plan covers {self.n_base}")
+        e = self._edges()
+        return np.stack([x[e[i]:e[i + 1]].mean(axis=0)
+                         for i in range(self.n_coarse)])
+
+    def expand(self, y: np.ndarray) -> np.ndarray:
+        """Inverse resampling: repeat each coarse value over its run."""
+        y = np.asarray(y)
+        if y.shape[0] != self.n_coarse:
+            raise ValueError(f"signal has {y.shape[0]} coarse intervals, "
+                             f"plan has {self.n_coarse}")
+        return np.repeat(y, self.reps, axis=0)
+
+    def pad_to(self, n: int) -> "CoarsePlan":
+        """Split the largest runs until the plan has ``n`` coarse
+        intervals (clamped to ``n_base``).  Splitting only ever SHRINKS
+        within-run activity ranges, so the plan's error bound still
+        holds; use it to bucket plans onto a few lengths so jitted
+        replays of different scenarios share compiled programs."""
+        n = min(n, self.n_base)
+        reps = list(self.reps)
+        while len(reps) < n:
+            i = int(np.argmax(reps))
+            if reps[i] < 2:
+                break
+            half = reps[i] // 2
+            reps[i:i + 1] = [reps[i] - half, half]
+        return CoarsePlan(np.asarray(reps, np.int64))
+
+
+def coarsen_plan(activity: np.ndarray, tol: float,
+                 max_merge: int = 64) -> CoarsePlan:
+    """Greedy run-merging of a base-resolution activity signal.
+
+    Consecutive intervals join the current run while the run's
+    max-min activity range (including the candidate) stays <= ``tol``
+    and the run is shorter than ``max_merge`` intervals.  With the
+    merged power set to the run mean (:meth:`CoarsePlan.merge`), the
+    instantaneous power error of the coarsened trace is bounded by
+    ``tol`` activity units, so the replay's temperature error is
+    bounded by ``tol`` x the DC thermal gain of the modulated power
+    map (:func:`dc_peak_rise_C`; DESIGN.md §9.3) — the linear-RC bound
+    the coarsening property test checks.
+
+    ``activity`` may be [T] or [T, K] (K signals coarsened jointly, the
+    range criterion applied to the worst signal — e.g. logic utilization
+    and DRAM traffic of one serving scenario).
+    """
+    act = np.asarray(activity, np.float64)
+    if act.ndim == 1:
+        act = act[:, None]
+    if act.ndim != 2 or act.shape[0] == 0:
+        raise ValueError("activity must be [T] or [T, K] with T >= 1")
+    if tol < 0:
+        raise ValueError("tol must be >= 0")
+    if max_merge < 1:
+        raise ValueError("max_merge must be >= 1")
+
+    reps = []
+    run = 1
+    lo = act[0].copy()
+    hi = act[0].copy()
+    for t in range(1, act.shape[0]):
+        nlo = np.minimum(lo, act[t])
+        nhi = np.maximum(hi, act[t])
+        if run < max_merge and float((nhi - nlo).max()) <= tol:
+            run += 1
+            lo, hi = nlo, nhi
+        else:
+            reps.append(run)
+            run = 1
+            lo = act[t].copy()
+            hi = act[t].copy()
+    reps.append(run)
+    return CoarsePlan(np.asarray(reps, np.int64))
+
+
+def dc_peak_rise_C(frame, F: dict) -> float:
+    """Peak steady-state temperature rise of ONE power frame [L,NY,NX].
+
+    The DC gain of the passive RC network: for a linear (open-loop)
+    replay, substituting power within a window by a value that deviates
+    at most dP pointwise moves the temperature trajectory by at most the
+    steady response to dP.  ``tol * dc_peak_rise_C(worst_frame, F)`` is
+    therefore a rigorous bound on the coarsened-replay temperature error
+    at activity tolerance ``tol`` (coarsen_plan docstring; tested in
+    tests/test_coarsen_replay.py)."""
+    dT, _ = thermal._solve_fields(jnp.asarray(frame, jnp.float32), F,
+                                  solver="pcg", use_pallas=False)
+    return float(jnp.max(dT))
+
+
+# ---------------------------------------------------------------------------
 # implicit replay core (scan over frames; vmappable over design points)
 # ---------------------------------------------------------------------------
 
@@ -267,7 +409,7 @@ class CosimReport:
 # top-level driver: batched AP-vs-SIMD per-workload co-simulation
 # ---------------------------------------------------------------------------
 
-def comparable_design_point(workload: str,
+def comparable_design_point(workload: str | M.Workload,
                             n_ap_start: int = M.N_DATA) -> M.DesignPoint:
     """Largest same-performance AP/SIMD pair that exists for a workload.
 
@@ -276,18 +418,24 @@ def comparable_design_point(workload: str,
     comparable; for fft and the low-arithmetic-intensity suite workloads
     it is not, so the AP is halved from ``n_ap_start`` (the dataset
     size, paper sizing n_AP = N) until the comparison point exists —
-    same-performance remains the invariant.
+    same-performance remains the invariant.  ``workload`` may be a
+    registered name or any :class:`~repro.core.models.Workload` instance
+    (e.g. one minted by ``models.derived_workload`` for a serving AI).
     """
-    if workload not in M.WORKLOADS:
+    if isinstance(workload, M.Workload):
+        wl = workload
+    elif workload in M.WORKLOADS:
+        wl = M.WORKLOADS[workload]
+    else:
         raise ValueError(f"unknown workload {workload!r}; expected one of "
                          f"{sorted(M.WORKLOADS)}")
     n_ap = n_ap_start
     while n_ap >= 1024:
         try:
-            return M.paper_design_point(workload, n_ap)
+            return M.design_point(wl, n_ap)
         except ValueError:
             n_ap //= 2
-    raise ValueError(f"no comparable design point for {workload!r}")
+    raise ValueError(f"no comparable design point for {wl.name!r}")
 
 def run_cosim(workloads=("dmm", "fft"), grid_n: int = 32,
               n_intervals: int = 64, t_end: float = 0.25,

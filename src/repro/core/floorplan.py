@@ -116,8 +116,11 @@ class SIMDFloorplan:
         """Static leakage of one layer (same gamma model as power_map)."""
         return M.GAMMA_W_MM2 * dp.simd_area_mm2
 
-    def power_map(self, grid_n: int, dp: "M.DesignPoint") -> np.ndarray:
-        wl = M.WORKLOADS[dp.workload]
+    def power_map(self, grid_n: int, dp: "M.DesignPoint",
+                  wl: "M.Workload | None" = None) -> np.ndarray:
+        # unregistered workloads (e.g. the serving cost model's derived
+        # per-config entries) must pass their Workload instance explicitly
+        wl = M.WORKLOADS[dp.workload] if wl is None else wl
         n = dp.simd_n_pus
         # eq (14) decomposition (normalized -> watts)
         p_exec_W, p_sync_W, _ = M.simd_phase_powers(wl, n)

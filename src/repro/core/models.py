@@ -136,6 +136,25 @@ def _calibrate() -> dict[str, Workload]:
 WORKLOADS = _calibrate()
 
 
+def derived_workload(name: str, arith_intensity: float,
+                     s_apu: float | None = None) -> Workload:
+    """Anchor a NEW workload off the DMM calibration (§3.1 scaling).
+
+    Synchronization intensity is inversely proportional to arithmetic
+    intensity, so any workload with a known AI (flop/word) inherits
+    ``i_s = i_s_dmm * AI_dmm / AI`` — the same rule ``_calibrate`` uses
+    for the suite workloads, exposed here so callers (e.g. the serving
+    cost model, which derives an AI per LLM config) can mint comparable
+    Workload instances without registering them in ``WORKLOADS``.
+    ``s_apu`` defaults to the DMM (MAC-dominated) per-PU speedup.
+    """
+    if arith_intensity <= 0:
+        raise ValueError("arith_intensity must be > 0")
+    base = WORKLOADS["dmm"]
+    i_s = base.i_s * ARITH_INTENSITY["dmm"] / arith_intensity
+    return Workload(name, i_s, base.s_apu if s_apu is None else s_apu)
+
+
 # --------------------------------------------------------------------------
 # SIMD processor model — eqs (2)-(6), (11)-(14)
 # --------------------------------------------------------------------------
@@ -275,19 +294,20 @@ class DesignPoint:
                (self.ap_power_W / self.ap_area_mm2)
 
 
-def paper_design_point(workload: str = "dmm",
-                       n_ap: int = N_DATA) -> DesignPoint:
-    """The §3/§4 comparison point: AP sized to the data set (n_AP = N = 2^20),
+def design_point(wl: Workload, n_ap: int = N_DATA) -> DesignPoint:
+    """Same-performance AP/SIMD pair for an arbitrary Workload instance.
 
-    SIMD sized to yield the same speedup."""
-    wl = WORKLOADS[workload]
+    The §3/§4 construction: AP sized to ``n_ap`` PUs, SIMD sized to
+    yield the same speedup (inverting eq 3).  Raises ValueError when the
+    AP speedup exceeds the SIMD synchronization ceiling 1/I_s, i.e. when
+    no same-performance SIMD exists."""
     s = ap_speedup(n_ap, wl)
     if s * wl.i_s >= 1.0:
-        raise ValueError(f"SIMD cannot reach speedup {s} for {workload} "
+        raise ValueError(f"SIMD cannot reach speedup {s} for {wl.name} "
                          f"(I_s bound {1/wl.i_s:.1f})")
     n_simd = 1.0 / (1.0 / s - wl.i_s)  # invert eq (3)
     return DesignPoint(
-        workload=workload,
+        workload=wl.name,
         speedup=s,
         ap_n_pus=n_ap,
         ap_area_mm2=_norm_area_to_mm2(ap_area(n_ap)),
@@ -296,6 +316,14 @@ def paper_design_point(workload: str = "dmm",
         simd_area_mm2=_norm_area_to_mm2(simd_area(n_simd)),
         simd_power_W=simd_power_W(n_simd, wl),
     )
+
+
+def paper_design_point(workload: str = "dmm",
+                       n_ap: int = N_DATA) -> DesignPoint:
+    """The §3/§4 comparison point: AP sized to the data set (n_AP = N = 2^20),
+
+    SIMD sized to yield the same speedup."""
+    return design_point(WORKLOADS[workload], n_ap)
 
 
 def break_even_area_mm2(workload: str) -> float:
@@ -367,7 +395,16 @@ def mem_traffic_bytes_per_s(workload: str, n_pus: int = N_DATA) -> float:
     if workload not in ARITH_INTENSITY:
         raise ValueError(f"unknown workload {workload!r}; expected one of "
                          f"{sorted(ARITH_INTENSITY)}")
-    return ap_flops_per_s(n_pus) / ARITH_INTENSITY[workload] * BYTES_PER_WORD
+    return traffic_bytes_per_s(ARITH_INTENSITY[workload], n_pus)
+
+
+def traffic_bytes_per_s(arith_intensity: float,
+                        n_pus: int = N_DATA) -> float:
+    """`mem_traffic_bytes_per_s` for an AI not in ``ARITH_INTENSITY`` —
+    e.g. the per-batch decode AI the serving cost model derives."""
+    if arith_intensity <= 0:
+        raise ValueError("arith_intensity must be > 0")
+    return ap_flops_per_s(n_pus) / arith_intensity * BYTES_PER_WORD
 
 
 def ap_backend_estimate(total_flops: float, n_pus: int = N_DATA) -> dict:

@@ -1,0 +1,21 @@
+"""LLM-serving traffic → power → thermal interval co-simulation.
+
+Turns per-request inference cost of the assigned ``configs/`` models
+(``serving.cost``, built on ``launch/roofline.py``) and a request-trace
+shape (``serving.traffic``) into per-interval stack power, replayed
+through the ``stack/feedback`` closed loop with adaptive interval
+coarsening (``serving.sim``; docs/serving.md walks the pipeline).
+"""
+from repro.serving.cost import (ModelServingCost, RequestShape,
+                                kv_bytes_per_token, serving_cost)
+from repro.serving.sim import (QueueResult, ServingReport, ServingScenario,
+                               fluid_queue, run_serving_cosim,
+                               verdict_table)
+from repro.serving.traffic import SHAPES, TrafficSpec
+
+__all__ = [
+    "ModelServingCost", "RequestShape", "kv_bytes_per_token",
+    "serving_cost", "QueueResult", "ServingReport", "ServingScenario",
+    "fluid_queue", "run_serving_cosim", "verdict_table", "SHAPES",
+    "TrafficSpec",
+]

@@ -84,21 +84,42 @@ def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
                  interval_dt, theta, t_amb, *, fb: FeedbackParams,
                  steps_per_interval: int, n_cg: int, n_die: int,
                  margin: int, die_n: int, use_pallas: bool,
-                 solver: str = "pcg", n_mg: int = 3):
+                 solver: str = "pcg", n_mg: int = 3, dt_scale=None):
     if use_pallas:
         from repro.kernels.thermal_stencil import ops as _ops
         A = lambda v: _ops.apply_operator_fields(v, F)
     else:
         A = lambda v: thermal.apply_operator_fields(v, F)
-    dt = interval_dt / steps_per_interval
-    # fixed-cost inner solve for the theta-scheme LHS: n_cg PCG
-    # iterations or n_mg multigrid V-cycles (hierarchy built once, here)
-    solve = thermal.implicit_lhs_solver(A, F, cap3, dt, theta,
-                                        solver=solver, n_cg=n_cg,
-                                        n_mg=n_mg, use_pallas=use_pallas)
+    if dt_scale is None:
+        dt = interval_dt / steps_per_interval
+        # fixed-cost inner solve for the theta-scheme LHS: n_cg PCG
+        # iterations or n_mg multigrid V-cycles (hierarchy built once,
+        # here)
+        solve = thermal.implicit_lhs_solver(A, F, cap3, dt, theta,
+                                            solver=solver, n_cg=n_cg,
+                                            n_mg=n_mg, use_pallas=use_pallas)
+        solve_for = lambda _scale: solve
+    else:
+        # variable-dt replay (coarsened serving traces): the step size is
+        # a traced per-interval quantity, so the theta-scheme LHS and its
+        # Jacobi preconditioner are rebuilt inside the scan body.  The
+        # multigrid hierarchy is assembled for ONE dt, hence PCG only.
+        if solver != "pcg":
+            raise ValueError("variable-dt replay (dt_scale) requires "
+                             "solver='pcg'; the multigrid hierarchy is "
+                             "built for a fixed step")
+        diagA = thermal._diag_fields(F)
+
+        def solve_for(scale):
+            dt = interval_dt * scale / steps_per_interval
+            lhs = lambda v: cap3 / dt * v + theta * A(v)
+            Minv = 1.0 / (cap3 / dt + theta * diagA)
+            return lambda rhs: thermal.pcg_fixed(lhs, Minv, rhs, n_cg)
     lm3 = logic_mask[:, None, None]
 
-    def interval(dTc, P_dyn):
+    def interval(dTc, xs):
+        P_dyn, scale = xs
+        solve = solve_for(scale)
         # DTM actuates on the MEASURED (start-of-interval) hot spot — a
         # real throttle controller reads the previous temperature sample.
         # Iterating it on the end-of-interval state instead couples a
@@ -136,8 +157,10 @@ def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
                      res, f, ref_W, leak_W)
 
     dT0 = jnp.zeros_like(dyn_frames[0])
+    scales = jnp.ones(dyn_frames.shape[0], dyn_frames.dtype) \
+        if dt_scale is None else jnp.asarray(dt_scale, dyn_frames.dtype)
     dT_end, (mx, mn, res, f, ref_W, leak_W) = \
-        jax.lax.scan(interval, dT0, dyn_frames)
+        jax.lax.scan(interval, dT0, (dyn_frames, scales))
     return dT_end + t_amb, mx + t_amb, mn + t_amb, res, f, ref_W, leak_W
 
 
@@ -152,7 +175,7 @@ def closed_loop_replay(dyn_frames, leak0, refresh0, logic_mask, F: dict,
                        die_n: int, n_die: int, steps_per_interval: int = 2,
                        n_cg: int = 40, margin: int = 0,
                        use_pallas: bool = False, solver: str = "pcg",
-                       n_mg: int = 3):
+                       n_mg: int = 3, dt_scale=None):
     """Replay one frame stack with temperature feedback.
 
     dyn_frames [T, L, NY, NX]: trace-modulated *dynamic* power (logic
@@ -162,6 +185,13 @@ def closed_loop_replay(dyn_frames, leak0, refresh0, logic_mask, F: dict,
     ``solver`` picks the fixed-cost inner solve: ``n_cg`` PCG iterations
     ("pcg") or ``n_mg`` multigrid V-cycles ("mg").
 
+    ``dt_scale`` [T] (optional) stretches interval i to
+    ``interval_dt * dt_scale[i]`` — the variable-step replay coarsened
+    serving traces use (``cosim.CoarsePlan.dt_scale``).  PCG only: the
+    step size becomes a traced quantity, which the fixed multigrid
+    hierarchy cannot follow.  The DTM controller then samples at the
+    coarsened boundaries (its reaction time follows the local step).
+
     Returns (T_end [L,NY,NX], peak_C [T,n_die], min_C [T,n_die],
     residual_C [T], throttle [T], refresh_W [T], leak_W [T]).
     """
@@ -169,7 +199,8 @@ def closed_loop_replay(dyn_frames, leak0, refresh0, logic_mask, F: dict,
                         interval_dt, theta, t_amb, fb=fb,
                         steps_per_interval=steps_per_interval, n_cg=n_cg,
                         n_die=n_die, margin=margin, die_n=die_n,
-                        use_pallas=use_pallas, solver=solver, n_mg=n_mg)
+                        use_pallas=use_pallas, solver=solver, n_mg=n_mg,
+                        dt_scale=dt_scale)
 
 
 @partial(jax.jit, static_argnames=_STATIC)
@@ -230,6 +261,63 @@ def stack_power_inputs(spec: StackSpec, grid: thermal.Grid,
             leak0[(l,) + win] = leak_cell
         elif layer.kind == DRAM:
             dyn[(slice(None), l) + win] = act * act_map
+            leak0[(l,) + win] = dram_leak_cell
+            refresh0[(l,) + win] = ref_map
+    return dyn, leak0, refresh0, spec.layer_mask(LOGIC)
+
+
+def stack_power_frames(spec: StackSpec, grid: thermal.Grid,
+                       activity: np.ndarray, logic_pmap: np.ndarray,
+                       logic_leak_W: float, dram_fp: dram.DRAMFloorplan,
+                       traffic_bytes_per_s):
+    """:func:`stack_power_inputs` for externally-computed interval signals.
+
+    ``activity`` [T] is a raw utilization trace (serving busy fraction;
+    NOT mean-normalized like a :class:`~repro.core.cosim.PowerTrace`) —
+    logic layers draw ``activity[t] *`` their dynamic map.  DRAM activate
+    power follows ``traffic_bytes_per_s``: a scalar is modulated by the
+    same activity (the `stack_power_inputs` convention, traffic tracks
+    compute), while an array [T] is taken as the per-interval traffic
+    verbatim (the serving lowering varies it with the decode batch's
+    arithmetic intensity).  Returns the same
+    (dyn, leak0, refresh0, logic_mask) tuple.
+    """
+    gn = logic_pmap.shape[0]
+    L, NY, NX, m = grid.n_layers, grid.dom_ny, grid.dom_nx, grid.margin
+    act = np.asarray(activity, np.float32)
+    if act.ndim != 1:
+        raise ValueError("activity must be a 1-D interval signal")
+    Tn = act.shape[0]
+    n_dram = len(spec.dram_layers)
+    traffic = np.asarray(traffic_bytes_per_s, np.float64)
+    if traffic.ndim == 0:
+        io_W_t = act * dram.activate_io_W(float(traffic), n_dram)
+    elif traffic.shape == (Tn,):
+        io_W_t = np.array([dram.activate_io_W(float(b), n_dram)
+                           for b in traffic], np.float32)
+    else:
+        raise ValueError("traffic_bytes_per_s must be a scalar or match "
+                         "the activity length")
+
+    dyn = np.zeros((Tn, L, NY, NX), np.float32)
+    leak0 = np.zeros((L, NY, NX), np.float32)
+    refresh0 = np.zeros((L, NY, NX), np.float32)
+
+    leak_cell = logic_leak_W / gn ** 2
+    dyn_logic = (logic_pmap - leak_cell).astype(np.float32)
+    act_shape = dram_fp.activate_map(gn)
+    ref_map = dram_fp.refresh_map(gn) * dram_fp.base_refresh_W()
+    dram_leak_cell = dram_fp.leakage_W() / gn ** 2
+
+    win = (slice(m, m + gn), slice(m, m + gn))
+    for l, layer in enumerate(spec.layers[:-1]):
+        if layer.kind == LOGIC:
+            dyn[(slice(None), l) + win] = \
+                act[:, None, None] * dyn_logic
+            leak0[(l,) + win] = leak_cell
+        elif layer.kind == DRAM:
+            dyn[(slice(None), l) + win] = \
+                io_W_t[:, None, None] * act_shape
             leak0[(l,) + win] = dram_leak_cell
             refresh0[(l,) + win] = ref_map
     return dyn, leak0, refresh0, spec.layer_mask(LOGIC)

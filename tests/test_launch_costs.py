@@ -1,0 +1,69 @@
+"""Smoke the analytic per-model cost paths over EVERY registered config.
+
+``params_sds`` is ``jax.eval_shape`` only — no arrays are materialized —
+so even the 236B config is cheap to sweep.  This is the coverage floor
+the serving package leans on: every config must yield finite parameter
+counts, per-shape reference FLOPs, and a positive serving cost with a
+monotone decode-AI curve.
+"""
+import functools
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import SHAPES, cell_is_runnable, get_config, list_configs
+from repro.launch import roofline as RF
+from repro.launch.steps import params_sds
+from repro.serving import serving_cost
+
+ALL = list_configs()
+
+
+@functools.lru_cache(maxsize=None)
+def _sds(name):
+    return params_sds(get_config(name), jnp.bfloat16)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_param_counts(name):
+    cfg = get_config(name)
+    total = RF.count_params(_sds(name))
+    active = RF.count_active_params(cfg, _sds(name))
+    assert total > 0
+    assert 0 < active <= total
+    if cfg.moe is None:
+        assert active == total
+    else:
+        assert active < total
+    # registry names carry a rough size tag ("-7b") — sanity-band it
+    tag = name.rsplit("-", 1)[-1]
+    if tag.endswith("b") and tag[:-1].replace(".", "").isdigit():
+        claimed = float(tag[:-1]) * 1e9
+        assert 0.4 * claimed < total < 2.5 * claimed, (name, total)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_reference_flops_per_shape(name):
+    cfg = get_config(name)
+    sds = _sds(name)
+    for cell in SHAPES.values():
+        ok, _reason = cell_is_runnable(cfg, cell)
+        if not ok:
+            continue
+        flops = RF.model_flops_per_device(cfg, cell, sds, n_chips=16)
+        assert flops > 0
+        if cell.kind == "train":      # 6N vs 2N per token
+            prefill_like = 2.0 / 6.0 * flops
+            assert prefill_like < flops
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_serving_cost_every_config(name):
+    cost = serving_cost(name)
+    assert cost.n_active > 0 and cost.request_flops > 0
+    assert cost.kv_bytes_tok >= 0
+    ai1, ai32 = cost.decode_ai(1), cost.decode_ai(32)
+    assert ai1 > 0 and ai32 >= ai1
+    wl = cost.workload(32)
+    assert wl.i_s > 0 and wl.s_apu > 0
+    assert cost.traffic_bytes_per_s(32, 1 << 20) > 0
