@@ -6,10 +6,18 @@ Every benchmark main records flat scalar metrics next to its text table
 ``benchmarks/baseline.json`` with per-metric tolerances.  The JSON goes
 to ``$BENCH_JSON_DIR`` (default: the current directory) as
 
-    {"bench": <name>, "schema": 1, "metrics": {<name>: <number>, ...}}
+    {"bench": <name>, "schema": 2,
+     "metrics": {<name>: <number>, ...},
+     "telemetry": {"counters": ..., "gauges": ..., "histograms": ...}}
 
 Metric values must be plain numbers (bools are stored as 0/1) — that is
-what keeps the regression gate a dumb, diffable comparison.
+what keeps the regression gate a dumb, diffable comparison.  Schema 2
+adds the OPTIONAL ``telemetry`` sub-object — the ``repro.obs`` registry
+snapshot at finish time (solver iterations/residuals, jit retraces per
+shape bucket, cache hit/miss, latency percentiles, ...).  The gate
+reads ONLY the flat ``metrics`` section; telemetry is observability
+payload, never a regression surface.  When any spans were recorded the
+Perfetto-loadable Chrome trace goes to ``TRACE_<name>.json`` alongside.
 """
 from __future__ import annotations
 
@@ -17,29 +25,54 @@ import json
 import os
 import time
 
+from repro import obs
+
 
 def json_path(name: str) -> str:
     out_dir = os.environ.get("BENCH_JSON_DIR", ".")
     return os.path.join(out_dir, f"BENCH_{name}.json")
 
 
-class Recorder:
-    """Collects metrics for one benchmark and writes its JSON artifact."""
+def trace_path(name: str) -> str:
+    out_dir = os.environ.get("BENCH_JSON_DIR", ".")
+    return os.path.join(out_dir, f"TRACE_{name}.json")
 
-    def __init__(self, name: str):
+
+class Recorder:
+    """Collects metrics for one benchmark and writes its JSON artifact.
+
+    Construction enables ``repro.obs`` (wiping any prior state) so the
+    benchmark run doubles as the telemetry capture; pass
+    ``telemetry=False`` to leave the obs state alone (A/B overhead
+    timing does its own enable/disable).
+    """
+
+    def __init__(self, name: str, telemetry: bool = True):
         self.name = name
         self.t0 = time.time()
         self.metrics: dict[str, float] = {}
+        self.telemetry = telemetry
+        if telemetry:
+            obs.enable(reset=True)
 
     def add(self, **metrics) -> None:
         for key, value in metrics.items():
             self.metrics[key] = float(value)
 
     def finish(self) -> dict:
-        """Stamp wall-clock, write ``BENCH_<name>.json``, return metrics."""
+        """Stamp wall-clock, write ``BENCH_<name>.json`` (and
+        ``TRACE_<name>.json`` if any spans were recorded), return
+        metrics."""
         self.metrics.setdefault("wall_s", time.time() - self.t0)
         path = json_path(self.name)
-        payload = {"bench": self.name, "schema": 1, "metrics": self.metrics}
+        payload = {"bench": self.name, "schema": 2, "metrics": self.metrics}
+        if self.telemetry:
+            snap = obs.snapshot()
+            if any(snap.values()):
+                payload["telemetry"] = snap
+            if obs.trace_events()["traceEvents"]:
+                tpath = obs.write_trace(trace_path(self.name))
+                print(f"[bench-trace] wrote {tpath}")
         with open(path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")

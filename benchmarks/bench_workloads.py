@@ -22,6 +22,7 @@ try:                                    # python -m benchmarks.run ...
 except ImportError:                     # python benchmarks/bench_*.py
     from _record import Recorder
 
+from repro import obs
 from repro.workloads import blackscholes as bs
 from repro.workloads import dmm, fft, histogram, knn, registry, sort, spmv
 
@@ -130,6 +131,27 @@ def scaling_rows(ns, rec: Recorder):
     rec.add(n_scaling_points=len(SCALING_WORKLOADS) * len(ns))
 
 
+def obs_overhead(rec: Recorder) -> float:
+    """Enabled-vs-disabled telemetry overhead on a warm scaling call.
+
+    Times ``registry.trace_counters("sort", 256)`` (jit cache warm, so
+    every obs touch point on the path — retrace counters are trace-time
+    only and do NOT fire here — is exercised at steady state) with obs
+    off, then on; the ratio is gated ≤ 1.05x in ``baseline.json``.
+    """
+    registry.trace_counters("sort", 256)            # warm + compile
+    call = lambda: registry.trace_counters("sort", 256)
+    with obs.scoped(on=False):
+        t_off = _timed(call, repeats=5)
+    with obs.scoped(on=True):
+        t_on = _timed(call, repeats=5)
+    ratio = t_on / max(t_off, 1e-9)
+    rec.add(obs_overhead_x=ratio)
+    print(f"\n# obs overhead: off={t_off:.4f}s on={t_on:.4f}s "
+          f"ratio={ratio:.3f}x (gated <= 1.05x)")
+    return ratio
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -142,6 +164,7 @@ def main(argv=None):
         rec.add(**{f"cycles_{name}": cycles, f"max_err_{name}": err})
     print("\n# device-resident scaling (speedup gated >= 10x at n=256)")
     scaling_rows(QUICK_NS if args.quick else SCALING_NS, rec)
+    obs_overhead(rec)
     return rec.finish()
 
 

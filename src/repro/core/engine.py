@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bitplane as bp
 from repro.core.bitplane import Field, FieldAllocator
 
@@ -231,16 +232,18 @@ def _run_schedule_body(planes, cmp_cols, cmp_key, w_cols, w_key):
     return jax.lax.scan(body, planes, (cmp_cols, cmp_key, w_cols, w_key))
 
 
-#: trace-time telemetry: how many times the jnp schedule runner has been
-#: traced (i.e. distinct shape buckets compiled).  Pinned by the
-#: retrace-count test — two schedules in one bucket must compile once.
-TRACE_STATS = {"run_schedule": 0}
-
-
 @partial(jax.jit, donate_argnums=(0,))
 def _run_schedule(planes: jax.Array, cmp_cols, cmp_key, w_cols, w_key):
-    """Execute a pass schedule; returns planes and per-pass matched counts."""
-    TRACE_STATS["run_schedule"] += 1       # increments at trace time only
+    """Execute a pass schedule; returns planes and per-pass matched counts.
+
+    The ``obs`` counters increment at TRACE time only — one per compiled
+    shape bucket, never per execution — so ``engine/retrace/run_schedule``
+    counts distinct compiles (the compiles-once test pins a bucket hit
+    against it; per-bucket variants carry the ``[P=..,Kc=..,Kw=..]``
+    label suffix)."""
+    obs.count("engine/retrace/run_schedule")
+    obs.count(f"engine/retrace/run_schedule[P={cmp_cols.shape[0]},"
+              f"Kc={cmp_cols.shape[1]},Kw={w_cols.shape[1]}]")
     return _run_schedule_body(planes, cmp_cols, cmp_key, w_cols, w_key)
 
 
@@ -250,7 +253,10 @@ def _next_pow2(n: int) -> int:
 
 #: jitted broadcast write — the un-jitted scatter dispatch costs ~1 ms
 #: per call on CPU, which dominated field clears between fused schedules
-_broadcast_write_jit = jax.jit(bp.broadcast_write)
+@jax.jit
+def _broadcast_write_jit(planes, cols, key):
+    obs.count("engine/retrace/bwrite")
+    return bp.broadcast_write(planes, cols, key)
 
 
 def bucket_schedule(sched: "PassSchedule"

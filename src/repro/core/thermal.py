@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.constants import AMBIENT_C
 from repro.stack.spec import (PAPER_SPEC, PAPER_STACK, StackParams,
                               StackSpec, spec_from_params)
@@ -413,21 +414,27 @@ def steady_state_stats(power: np.ndarray | jax.Array, grid: Grid,
     pathological hierarchy could stall earlier; callers can check
     instead of trusting the iteration count).
     """
-    F = grid.fields()
-    power = grid.pad_power(power)
-    m = grid.margin
-    if m:
-        power = jnp.pad(power, ((0, 0), (m, m), (m, m)))
-    dT, iters = _solve_fields(power, F, solver, use_pallas, tol)
-    resid = jnp.linalg.norm(power - apply_operator_fields(dT, F)) \
-        / jnp.linalg.norm(power)
-    n_die = grid.n_die_layers
-    if m:
-        dT = dT[:n_die, m:m + grid.ny, m:m + grid.nx]
-    else:
-        dT = dT[:n_die]
-    return dT + t_amb, {"iterations": int(iters), "solver": solver,
-                        "rel_residual": float(resid)}
+    with obs.span("thermal/steady", solver=solver,
+                  shape=f"{grid.n_layers}x{grid.dom_ny}x{grid.dom_nx}"):
+        F = grid.fields()
+        power = grid.pad_power(power)
+        m = grid.margin
+        if m:
+            power = jnp.pad(power, ((0, 0), (m, m), (m, m)))
+        dT, iters = _solve_fields(power, F, solver, use_pallas, tol)
+        resid = jnp.linalg.norm(power - apply_operator_fields(dT, F)) \
+            / jnp.linalg.norm(power)
+        n_die = grid.n_die_layers
+        if m:
+            dT = dT[:n_die, m:m + grid.ny, m:m + grid.nx]
+        else:
+            dT = dT[:n_die]
+        stats = {"iterations": int(iters), "solver": solver,
+                 "rel_residual": float(resid)}
+    obs.count("thermal/steady/solves")
+    obs.observe(f"thermal/steady/iterations[{solver}]", stats["iterations"])
+    obs.observe("thermal/steady/rel_residual", stats["rel_residual"])
+    return dT + t_amb, stats
 
 
 def steady_state(power: np.ndarray | jax.Array, grid: Grid,
@@ -487,7 +494,7 @@ def explicit_dt(grid: Grid) -> float:
 # stepper (cosim.py replays per-interval power traces through it)
 # ---------------------------------------------------------------------------
 
-def _implicit_scan(dT0, power, A, solve, n_steps: int):
+def _implicit_scan(dT0, power, A, solve, n_steps: int, lhs=None):
     """theta-scheme steps in excess-temperature space  C dT/dt = P - G dT.
 
     Solves for the increment:  (C/dt + theta G) delta = P - G dT_n,  then
@@ -496,13 +503,24 @@ def _implicit_scan(dT0, power, A, solve, n_steps: int):
     closure for it (fixed-iteration PCG or fixed-cycle multigrid,
     :func:`implicit_lhs_solver`) so the whole integration is one scan —
     scannable and vmappable.
+
+    With ``lhs`` (the theta-scheme LHS closure) given, the per-step ys
+    also carry the TRUE relative linear residual of each inner solve,
+    ``||rhs - lhs(delta)|| / ||rhs||`` — one extra matvec per step, paid
+    only on the telemetry path (``obs`` enabled), never in the default
+    compiled program.
     """
 
     def step(dTc, _):
         rhs = power - A(dTc)
         delta = solve(rhs)
         # emit the PRE-step max, matching the explicit transient()'s peaks
-        return dTc + delta, jnp.max(dTc)
+        peak = jnp.max(dTc)
+        if lhs is not None:
+            res = jnp.linalg.norm(rhs - lhs(delta)) \
+                / jnp.maximum(jnp.linalg.norm(rhs), 1e-30)
+            return dTc + delta, (peak, res)
+        return dTc + delta, peak
 
     return jax.lax.scan(step, dT0, None, length=n_steps)
 
@@ -534,11 +552,17 @@ def implicit_lhs_solver(A, F, cap3, dt, theta, *, solver: str = "pcg",
     return lambda rhs: pcg_fixed(lhs, Minv, rhs, n_cg)
 
 
-@partial(jax.jit, static_argnames=("n_steps", "n_cg"))
+@partial(jax.jit, static_argnames=("n_steps", "n_cg", "with_residuals"))
 def transient_implicit(T0, power, g_lat, g_vert, g_pkg, cap, dt,
                        n_steps: int, theta: float = 1.0,
-                       t_amb: float = AMBIENT_C, n_cg: int = 50):
-    """Implicit counterpart of :func:`transient` (same contract/returns)."""
+                       t_amb: float = AMBIENT_C, n_cg: int = 50,
+                       with_residuals: bool = False):
+    """Implicit counterpart of :func:`transient` (same contract/returns).
+
+    ``with_residuals=True`` (static) appends per-step relative linear
+    residuals to the return — ``(T, peaks, res)`` — for telemetry; the
+    default keeps the historical 2-tuple and compiled program.
+    """
     L = T0.shape[0]
     diag = _diag(T0.shape, g_lat, g_vert, g_pkg)
     cap3 = jnp.broadcast_to(jnp.asarray(cap, jnp.float32), (L,))[:, None, None]
@@ -546,27 +570,40 @@ def transient_implicit(T0, power, g_lat, g_vert, g_pkg, cap, dt,
     lhs = lambda v: cap3 / dt * v + theta * A(v)
     Minv = 1.0 / (cap3 / dt + theta * diag)
     solve = lambda rhs: pcg_fixed(lhs, Minv, rhs, n_cg)
+    if with_residuals:
+        dT, (peaks, res) = _implicit_scan(T0 - t_amb, power, A, solve,
+                                          n_steps, lhs=lhs)
+        return dT + t_amb, peaks + t_amb, res
     dT, peaks = _implicit_scan(T0 - t_amb, power, A, solve, n_steps)
     return dT + t_amb, peaks + t_amb
 
 
 @partial(jax.jit, static_argnames=("n_steps", "n_cg", "solver", "n_mg",
-                                   "use_pallas"))
+                                   "use_pallas", "with_residuals"))
 def transient_implicit_fields(T0, power, F: dict, cap3, dt, n_steps: int,
                               theta: float = 1.0, t_amb: float = AMBIENT_C,
                               n_cg: int = 50, solver: str = "pcg",
-                              n_mg: int = 3, use_pallas: bool = False):
+                              n_mg: int = 3, use_pallas: bool = False,
+                              with_residuals: bool = False):
     """Implicit theta-scheme on the heterogeneous (production) operator.
 
     T0/power: [L, NY, NX] over the full (die + margin) domain; cap3 the
     per-cell capacity field (``Grid.capacity_field()``).  ``solver``
     selects the fixed-cost inner solve: ``n_cg`` PCG iterations or
-    ``n_mg`` multigrid V-cycles per step.
+    ``n_mg`` multigrid V-cycles per step.  ``with_residuals=True``
+    (static) appends per-step relative linear residuals:
+    ``(T, peaks, res)``.
     """
+    obs.count("thermal/retrace/transient_fields")
     A = lambda v: apply_operator_fields(v, F)
     solve = implicit_lhs_solver(A, F, cap3, dt, theta, solver=solver,
                                 n_cg=n_cg, n_mg=n_mg,
                                 use_pallas=use_pallas)
+    if with_residuals:
+        lhs = lambda v: cap3 / dt * v + theta * A(v)
+        dT, (peaks, res) = _implicit_scan(T0 - t_amb, power, A, solve,
+                                          n_steps, lhs=lhs)
+        return dT + t_amb, peaks + t_amb, res
     dT, peaks = _implicit_scan(T0 - t_amb, power, A, solve, n_steps)
     return dT + t_amb, peaks + t_amb
 
@@ -579,18 +616,37 @@ def transient_solve_implicit(power, grid: Grid, t_end: float,
     """Implicit counterpart of :func:`transient_solve` with a chosen step
     count (the point: n_steps can be 10-1000x below the explicit bound).
     ``solver="mg"`` runs the multigrid inner solve on the fields form of
-    the same stack."""
+    the same stack.
+
+    With ``obs`` enabled the per-step inner-solve residuals are computed
+    on device (one extra matvec per step) and recorded under
+    ``thermal/transient/*``; the public return stays the 2-tuple.
+    """
+    wres = obs.is_enabled()
     power = grid.pad_power(power)
     dt = t_end / n_steps
     T0 = jnp.full(power.shape, t_amb, jnp.float32)
-    if solver == "mg":
-        F = grid.fields()
-        cap3 = grid.capacity_field()
-        return transient_implicit_fields(T0, power, F, cap3, dt, n_steps,
-                                         theta, t_amb, n_cg, solver="mg",
-                                         n_mg=n_mg)
-    g = grid.conductances()
-    cap = grid.capacities()
-    return transient_implicit(T0, power, g["g_lat"], g["g_vert"],
-                              g["g_pkg"], cap, dt, n_steps, theta, t_amb,
-                              n_cg)
+    with obs.span("thermal/transient", solver=solver, n_steps=n_steps):
+        if solver == "mg":
+            F = grid.fields()
+            cap3 = grid.capacity_field()
+            out = transient_implicit_fields(T0, power, F, cap3, dt,
+                                            n_steps, theta, t_amb, n_cg,
+                                            solver="mg", n_mg=n_mg,
+                                            with_residuals=wres)
+        else:
+            g = grid.conductances()
+            cap = grid.capacities()
+            out = transient_implicit(T0, power, g["g_lat"], g["g_vert"],
+                                     g["g_pkg"], cap, dt, n_steps, theta,
+                                     t_amb, n_cg, with_residuals=wres)
+    if wres:
+        T, peaks, res = out
+        obs.count("thermal/transient/solves")
+        obs.count("thermal/transient/steps", n_steps)
+        obs.count("thermal/transient/inner_iterations",
+                  n_steps * (n_mg if solver == "mg" else n_cg))
+        obs.observe_many("thermal/transient/step_rel_residual",
+                         np.asarray(res, np.float64))
+        return T, peaks
+    return out

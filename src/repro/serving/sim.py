@@ -32,6 +32,7 @@ import math
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import cosim
 from repro.core import models as M
 from repro.core import thermal
@@ -257,6 +258,55 @@ def _machine_floorplan(machine: str, dp: M.DesignPoint, wl: M.Workload):
     raise ValueError(f"unknown machine {machine!r}")
 
 
+def _serving_round(scenario: ServingScenario, arrivals, cost, cap, dp,
+                   f_base, plan, coarsen, spec, grid, pmap, leak_W, dfp,
+                   fb, margin):
+    """One throttle↔queue macro-iteration of the serving co-simulation.
+
+    Returns ``(q, plan, f_base, residual, repl)`` with ``repl`` the full
+    replay output ``(dyn, peaks, mins, picard_res, f_c, ref_W,
+    leak_Wt)`` of this round (``dyn`` kept for the coarsening error
+    bound).
+    """
+    tr = scenario.traffic
+    T = arrivals.shape[0]
+    q = fluid_queue(arrivals, cost, cap, f_base, tr.interval_s,
+                    scenario.max_batch)
+    # demand traffic at the interval's decode batch (per-batch AI)
+    traffic_t = np.array(
+        [q.busy[t] * cost.traffic_bytes_per_s(int(q.batch[t]),
+                                              dp.ap_n_pus)
+         for t in range(T)])
+    if plan is None:        # frozen after round 1: stable compile
+        if coarsen and scenario.coarsen_tol > 0:
+            tref = max(traffic_t.max(), 1e-30)
+            joint = np.stack([q.busy, traffic_t / tref], axis=1)
+            plan = cosim.coarsen_plan(joint, scenario.coarsen_tol,
+                                      scenario.max_merge)
+            qmax = scenario.pad_quantum
+            plan = plan.pad_to(
+                min(-(-plan.n_coarse // qmax) * qmax, T))
+        else:
+            plan = cosim.CoarsePlan(np.ones(T, np.int64))
+    busy_c = plan.merge(q.busy)
+    traffic_c = plan.merge(traffic_t)
+    dyn, l0, r0, lm = feedback.stack_power_frames(
+        spec, grid, busy_c, pmap, leak_W, dfp, traffic_c)
+    res = feedback.closed_loop_replay(
+        jnp.asarray(dyn), jnp.asarray(l0), jnp.asarray(r0),
+        jnp.asarray(lm), grid.fields(), grid.capacity_field(),
+        tr.interval_s, scenario.theta, fb=fb,
+        die_n=scenario.grid_n, n_die=spec.n_die_layers,
+        steps_per_interval=scenario.steps_per_interval,
+        n_cg=scenario.n_cg, margin=margin, solver="pcg",
+        dt_scale=jnp.asarray(plan.dt_scale()))
+    _, peaks, mins, picard_res, f_c, ref_W, leak_Wt = res
+    f_new = plan.expand(np.asarray(f_c))
+    residual = float(np.abs(f_new - f_base).max())
+    return q, plan, f_new, residual, (dyn, peaks, mins, picard_res, f_c,
+                                      ref_W, leak_Wt)
+
+
 def run_serving_cosim(scenario: ServingScenario,
                       machines=("ap", "simd"),
                       fb: feedback.FeedbackParams = feedback.FeedbackParams(),
@@ -295,41 +345,27 @@ def run_serving_cosim(scenario: ServingScenario,
         f_base = np.ones(T)
         plan = None
         residual = np.inf
-        for _ in range(scenario.n_rounds):
-            q = fluid_queue(arrivals, cost, cap, f_base, tr.interval_s,
-                            scenario.max_batch)
-            # demand traffic at the interval's decode batch (per-batch AI)
-            traffic_t = np.array(
-                [q.busy[t] * cost.traffic_bytes_per_s(int(q.batch[t]),
-                                                      dp.ap_n_pus)
-                 for t in range(T)])
-            if plan is None:        # frozen after round 1: stable compile
-                if coarsen and scenario.coarsen_tol > 0:
-                    tref = max(traffic_t.max(), 1e-30)
-                    joint = np.stack([q.busy, traffic_t / tref], axis=1)
-                    plan = cosim.coarsen_plan(joint, scenario.coarsen_tol,
-                                              scenario.max_merge)
-                    qmax = scenario.pad_quantum
-                    plan = plan.pad_to(
-                        min(-(-plan.n_coarse // qmax) * qmax, T))
-                else:
-                    plan = cosim.CoarsePlan(np.ones(T, np.int64))
-            busy_c = plan.merge(q.busy)
-            traffic_c = plan.merge(traffic_t)
-            dyn, l0, r0, lm = feedback.stack_power_frames(
-                spec, grid, busy_c, pmap, leak_W, dfp, traffic_c)
-            res = feedback.closed_loop_replay(
-                jnp.asarray(dyn), jnp.asarray(l0), jnp.asarray(r0),
-                jnp.asarray(lm), grid.fields(), grid.capacity_field(),
-                tr.interval_s, scenario.theta, fb=fb,
-                die_n=scenario.grid_n, n_die=spec.n_die_layers,
-                steps_per_interval=scenario.steps_per_interval,
-                n_cg=scenario.n_cg, margin=margin, solver="pcg",
-                dt_scale=jnp.asarray(plan.dt_scale()))
-            _, peaks, mins, picard_res, f_c, ref_W, leak_Wt = res
-            f_new = plan.expand(np.asarray(f_c))
-            residual = float(np.abs(f_new - f_base).max())
-            f_base = f_new
+        span = obs.span("serving/machine", machine=machine,
+                        scenario=scenario.label, n_base=T)
+        with span:
+            for rnd in range(scenario.n_rounds):
+                with obs.span("serving/round", machine=machine, round=rnd):
+                    q, plan, f_base, residual, repl = _serving_round(
+                        scenario, arrivals, cost, cap, dp, f_base, plan,
+                        coarsen, spec, grid, pmap, leak_W, dfp, fb,
+                        margin)
+        dyn, peaks, mins, picard_res, f_c, ref_W, leak_Wt = repl
+        if obs.is_enabled():
+            w_req = cost.request_flops
+            obs.count("serving/requests", q.latency_s.size)
+            obs.count("serving/base_intervals", T)
+            obs.count("serving/coarse_intervals", plan.n_coarse)
+            obs.observe_many("serving/request_latency_s", q.latency_s)
+            obs.observe_many("serving/queue_depth_req",
+                             q.backlog_flops / w_req)
+            obs.observe_many("serving/batch_occupancy",
+                             q.batch / scenario.max_batch)
+            obs.observe("serving/throttle_residual", residual)
 
         stack_rep = feedback.StackReport(
             label=f"{scenario.label}/{machine}", interval_s=tr.interval_s,

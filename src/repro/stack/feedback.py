@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import cosim
 from repro.core import models as M
 from repro.core import thermal
@@ -485,13 +486,28 @@ def replay_cases(cases, spec: StackSpec, fb: FeedbackParams, grid_n: int,
     Fb = {k: jnp.stack([F[k] for F in Fs]) for k in Fs[0]}
     replay = closed_loop_batch if not n_shards else partial(
         closed_loop_sharded, n_shards=n_shards)
-    _, peaks, mins, res, thr, ref_W, leak_W = replay(
-        jnp.asarray(np.stack(dyns)), jnp.asarray(np.stack(leaks)),
-        jnp.asarray(np.stack(refs)), jnp.asarray(np.stack(masks)), Fb,
-        jnp.stack(caps), interval_dt, theta, fb=fb, die_n=grid_n,
-        n_die=spec.n_die_layers, steps_per_interval=steps_per_interval,
-        n_cg=n_cg, margin=margin, use_pallas=use_pallas, solver=solver,
-        n_mg=n_mg)
+    with obs.span("feedback/replay", cases=len(labels), grid_n=grid_n,
+                  solver=solver, n_shards=n_shards or 0):
+        _, peaks, mins, res, thr, ref_W, leak_W = replay(
+            jnp.asarray(np.stack(dyns)), jnp.asarray(np.stack(leaks)),
+            jnp.asarray(np.stack(refs)), jnp.asarray(np.stack(masks)), Fb,
+            jnp.stack(caps), interval_dt, theta, fb=fb, die_n=grid_n,
+            n_die=spec.n_die_layers, steps_per_interval=steps_per_interval,
+            n_cg=n_cg, margin=margin, use_pallas=use_pallas, solver=solver,
+            n_mg=n_mg)
+    if obs.is_enabled():
+        res_h, thr_h = np.asarray(res, np.float64), np.asarray(thr,
+                                                               np.float64)
+        n_int = res_h.shape[-1] if res_h.ndim else 0
+        obs.count("feedback/intervals", len(labels) * n_int)
+        obs.count("feedback/picard_iterations",
+                  len(labels) * n_int * fb.n_picard)
+        obs.count("feedback/throttled_intervals",
+                  int((thr_h < 1.0).sum()))
+        obs.observe_many("feedback/picard_residual_C",
+                         res_h.reshape(len(labels), -1).max(axis=1))
+        obs.observe_many("feedback/throttle_duty",
+                         thr_h.reshape(len(labels), -1).mean(axis=1))
     base_ref = dram.DRAMFloorplan(die_w_mm=1.0).base_refresh_W() \
         * len(spec.dram_layers)
     return {

@@ -10,15 +10,24 @@ bit-identical) and a JSON manifest with the full canonical spec, which
 collision can never serve wrong results.  Stack geometry is NOT stored:
 it is deterministic from the point (``dram_on_logic(n_dram)``) and is
 rebuilt on load.
+
+A corrupt or truncated cache file (interrupted writer on a different
+filesystem, disk-full, bit rot) is treated as a MISS, not an error: the
+sweep recomputes and overwrites it.  Hits, misses, corrupt files, and
+stores are counted under ``sweep/cache/*`` when :mod:`repro.obs` is
+enabled.
 """
 from __future__ import annotations
 
 import json
 import os
+import zipfile
+import zlib
 from pathlib import Path
 
 import numpy as np
 
+from repro import obs
 from repro.stack import dram, feedback
 from repro.stack.spec import dram_on_logic
 from repro.sweep.engine import SweepRecord, SweepResult, resolve_fb
@@ -26,6 +35,11 @@ from repro.sweep.spec import SweepPoint, SweepSpec
 
 _ARRAYS = ("peak_C", "min_C", "residual_C", "throttle", "refresh_W",
            "leak_W")
+
+#: everything a damaged npz can throw while being opened/read: not a
+#: zip at all, zip ok but members truncated/absent, manifest not JSON
+_CORRUPT_ERRORS = (zipfile.BadZipFile, zlib.error, KeyError, ValueError,
+                   EOFError, OSError, json.JSONDecodeError)
 
 
 def default_cache_dir() -> Path:
@@ -55,15 +69,36 @@ def store(result: SweepResult, cache_dir=None) -> Path:
     tmp = path.with_suffix(".tmp.npz")
     np.savez(tmp, manifest=np.array(json.dumps(manifest)), **payload)
     os.replace(tmp, path)
+    obs.count("sweep/cache/store")
+    if obs.is_enabled():
+        obs.count("sweep/cache/bytes_written", path.stat().st_size)
     return path
 
 
 def load(spec: SweepSpec, cache_dir=None) -> SweepResult | None:
-    """Load a cached sweep for ``spec``; None on miss or manifest
-    mismatch (hash-collision guard)."""
+    """Load a cached sweep for ``spec``; None on miss, manifest mismatch
+    (hash-collision guard), or a corrupt/truncated file (recompute and
+    overwrite rather than fail the sweep)."""
     path = path_for(spec, cache_dir)
     if not path.exists():
+        obs.count("sweep/cache/miss")
         return None
+    try:
+        result = _read(spec, path)
+    except _CORRUPT_ERRORS:
+        obs.count("sweep/cache/corrupt")
+        obs.count("sweep/cache/miss")
+        return None
+    if result is None:
+        obs.count("sweep/cache/miss")
+        return None
+    obs.count("sweep/cache/hit")
+    if obs.is_enabled():
+        obs.count("sweep/cache/bytes_read", path.stat().st_size)
+    return result
+
+
+def _read(spec: SweepSpec, path: Path) -> SweepResult | None:
     with np.load(path, allow_pickle=False) as z:
         manifest = json.loads(str(z["manifest"]))
         if manifest["spec"] != spec.canonical():

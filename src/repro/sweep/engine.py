@@ -18,6 +18,7 @@ import dataclasses
 import math
 from collections import defaultdict
 
+from repro import obs
 from repro.core import cosim
 from repro.core import models as M
 from repro.core.constants import DRAM_LIMIT_C
@@ -117,25 +118,30 @@ def _run_group(spec: SweepSpec, points: list[SweepPoint], n_dram: int,
     margin = spec.grid_n // 4
     interval_dt = spec.t_end / spec.n_intervals
 
-    keys, cases = [], []
-    for p in points:
-        dp = cosim.comparable_design_point(p.workload, p.size)
-        wl = M.WORKLOADS[p.workload]
-        for mc in spec.machines:
-            trace = cosim.ap_workload_trace(
-                p.workload, spec.n_intervals, spec.trace_elems(p.size)) \
-                if mc == "ap" else \
-                cosim.simd_phase_trace(wl, dp, spec.n_intervals)
-            keys.append((p, mc))
-            cases.append((f"{p.label}/{mc}", feedback.assemble_case(
-                dp, p.workload, mc, stack_spec, params, spec.grid_n,
-                trace, margin)))
+    with obs.span("sweep/assemble", n_dram=n_dram, fb=fb_mode,
+                  points=len(points)):
+        keys, cases = [], []
+        for p in points:
+            dp = cosim.comparable_design_point(p.workload, p.size)
+            wl = M.WORKLOADS[p.workload]
+            for mc in spec.machines:
+                trace = cosim.ap_workload_trace(
+                    p.workload, spec.n_intervals, spec.trace_elems(p.size)) \
+                    if mc == "ap" else \
+                    cosim.simd_phase_trace(wl, dp, spec.n_intervals)
+                keys.append((p, mc))
+                cases.append((f"{p.label}/{mc}", feedback.assemble_case(
+                    dp, p.workload, mc, stack_spec, params, spec.grid_n,
+                    trace, margin)))
+    obs.count("sweep/cases", len(cases))
 
-    reports = feedback.replay_cases(
-        cases, stack_spec, fb, spec.grid_n, interval_dt, theta=spec.theta,
-        steps_per_interval=spec.steps_per_interval, n_cg=spec.n_cg,
-        margin=margin, solver=spec.solver, n_mg=spec.n_mg,
-        n_shards=n_shards)
+    with obs.span("sweep/replay", n_dram=n_dram, fb=fb_mode,
+                  cases=len(cases)):
+        reports = feedback.replay_cases(
+            cases, stack_spec, fb, spec.grid_n, interval_dt,
+            theta=spec.theta, steps_per_interval=spec.steps_per_interval,
+            n_cg=spec.n_cg, margin=margin, solver=spec.solver,
+            n_mg=spec.n_mg, n_shards=n_shards)
     return {(p, mc): SweepRecord(point=p, machine=mc,
                                  report=reports[f"{p.label}/{mc}"])
             for p, mc in keys}
@@ -168,9 +174,12 @@ def run_sweep(spec: SweepSpec, cache_dir=None, use_cache: bool = True,
         by_group[(p.n_dram, p.fb_mode)].append(p)
 
     results: dict[tuple[SweepPoint, str], SweepRecord] = {}
-    for (n_dram, fb_mode), pts in sorted(by_group.items()):
-        results.update(_run_group(spec, pts, n_dram, fb_mode, params,
-                                  n_shards))
+    with obs.span("sweep/run", groups=len(by_group)):
+        for (n_dram, fb_mode), pts in sorted(by_group.items()):
+            with obs.span("sweep/group", n_dram=n_dram, fb=fb_mode,
+                          points=len(pts)):
+                results.update(_run_group(spec, pts, n_dram, fb_mode,
+                                          params, n_shards))
 
     records = tuple(results[(p, mc)] for p in spec.points()
                     for mc in spec.machines)

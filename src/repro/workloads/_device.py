@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import bitplane as bp
 from repro.core import isa
 from repro.core import engine as E
@@ -69,6 +70,9 @@ class MinExtractTrace:
 def _min_extract_program(state, copy_cc, copy_ck, copy_wc, copy_wk,
                          remaining, *, val_cols, active_col, cand_col,
                          rounds, readout):
+    obs.count("workloads/retrace/min_extract")
+    obs.count(f"workloads/retrace/min_extract[m={len(val_cols)},"
+              f"rounds={rounds},readout={readout}]")
     cand = jnp.array([cand_col], jnp.int32)
     active = jnp.array([active_col], jnp.int32)
     one = jnp.array([1], jnp.uint32)
@@ -178,6 +182,10 @@ def tagged_rows(tag_row: np.ndarray) -> np.ndarray:
 
 @jax.jit
 def _count_probes_program(state, cols, keys, real):
+    obs.count("workloads/retrace/count_probes")
+    obs.count(f"workloads/retrace/count_probes[n={cols.shape[0]},"
+              f"k={cols.shape[1]}]")
+
     def body(st0, xs):
         cc, kk, is_real = xs
         st, matched = E.state_compare(st0, cc, kk)

@@ -95,6 +95,60 @@ def test_update_refreshes_values_not_tolerances(check_bench, tmp_path):
     assert check_bench.main([a, "--baseline", b]) == 0
 
 
+def test_telemetry_section_is_never_gated(check_bench, tmp_path):
+    """A schema-2 artifact's ``telemetry`` sub-object is observability
+    payload: values in it that would fail every rule must not be read by
+    the gate, and telemetry keys never satisfy a gated metric."""
+    b = _baseline(tmp_path, BASELINE)
+    telemetry = {
+        "counters": {"peak_C": 10_000, "speedup": 0},   # would fail if read
+        "gauges": {"maxdiff": 99.0},
+        "histograms": {"iters": {"count": 1, "p50": 1e9}},
+    }
+    a = _write(tmp_path, "BENCH_thermal.json",
+               {"bench": "thermal", "schema": 2, "metrics": GOOD,
+                "telemetry": telemetry})
+    assert check_bench.main([a, "--baseline", b]) == 0
+
+    # a gated metric present ONLY in telemetry is still a missing metric
+    metrics = dict(GOOD)
+    del metrics["peak_C"]
+    a = _write(tmp_path, "BENCH_thermal.json",
+               {"bench": "thermal", "schema": 2, "metrics": metrics,
+                "telemetry": telemetry})
+    assert check_bench.main([a, "--baseline", b]) == 1
+
+
+def test_recorder_writes_schema2_with_telemetry(tmp_path, monkeypatch):
+    """The Recorder attaches the obs snapshot as ``telemetry`` and writes
+    the Perfetto span trace alongside, without polluting ``metrics``."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(_TOOLS), "benchmarks"))
+    try:
+        from _record import Recorder
+    finally:
+        sys.path.pop(0)
+    from repro import obs
+
+    monkeypatch.setenv("BENCH_JSON_DIR", str(tmp_path))
+    rec = Recorder("unit")
+    obs.count("unit/events", 3)
+    with obs.span("unit/section"):
+        pass
+    rec.add(answer=42)
+    rec.finish()
+    obs.disable()
+
+    payload = json.loads((tmp_path / "BENCH_unit.json").read_text())
+    assert payload["schema"] == 2
+    assert payload["metrics"]["answer"] == 42.0
+    assert payload["telemetry"]["counters"]["unit/events"] == 3
+    assert "unit/events" not in payload["metrics"]
+    trace = json.loads((tmp_path / "TRACE_unit.json").read_text())
+    assert any(e["name"] == "unit/section"
+               for e in trace["traceEvents"])
+
+
 def test_repo_baseline_is_wellformed(check_bench):
     """The committed baseline parses and only uses known rule keys."""
     path = os.path.join(os.path.dirname(_TOOLS), "benchmarks",

@@ -157,7 +157,12 @@ def test_device_counters_cross_check_host_replay():
 # --------------------------------------------------- shape-bucketed cache
 def test_same_bucket_compiles_once():
     """Two schedules with different (P, Kc) in one power-of-two bucket
-    must share a single compiled program (no retrace)."""
+    must share a single compiled program (no retrace).
+
+    The jnp runner's obs counter increments at TRACE time only, so with
+    obs forced on it counts distinct compiles of ``_run_schedule``."""
+    from repro import obs
+
     def sched_of(n_passes, kc):
         passes = [(list(range(kc)), [1] * kc, [kc], [0])
                   for _ in range(n_passes)]
@@ -165,11 +170,12 @@ def test_same_bucket_compiles_once():
 
     # unusual n_bits so no earlier test populated this plane shape
     eng = APEngine(n_words=64, n_bits=23)
-    eng.run(sched_of(5, 3))                    # traces the (8, 4, 1) bucket
-    baseline = E.TRACE_STATS["run_schedule"]
-    eng.run(sched_of(7, 4))                    # same (8, 4, 1) bucket: hit
-    eng.run(sched_of(8, 2))                    # (8, 2, 1): a fresh bucket
-    assert E.TRACE_STATS["run_schedule"] == baseline + 1
+    with obs.scoped():
+        eng.run(sched_of(5, 3))                # traces the (8, 4, 1) bucket
+        baseline = obs.value("engine/retrace/run_schedule")
+        eng.run(sched_of(7, 4))                # same (8, 4, 1) bucket: hit
+        eng.run(sched_of(8, 2))                # (8, 2, 1): a fresh bucket
+        assert obs.value("engine/retrace/run_schedule") == baseline + 1
 
 
 def test_bucketed_run_results_and_accounting_unpadded():

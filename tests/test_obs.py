@@ -1,0 +1,194 @@
+"""The observability layer: registry math, spans, disabled-mode no-op,
+Chrome trace-event export."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.registry import Histogram, Registry, percentile
+from repro.obs.trace import Tracer
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """Each test sees a fresh, disabled obs state and restores none of
+    its own residue on the module singletons."""
+    prev = obs.is_enabled()
+    obs.disable()
+    obs.reset()
+    yield
+    obs.reset()
+    (obs.enable if prev else obs.disable)()
+
+
+# ------------------------------------------------------------- disabled
+
+def test_disabled_mode_is_strict_noop():
+    obs.count("x")
+    obs.gauge("g", 3.0)
+    obs.observe("h", 1.0)
+    obs.observe_many("h", [2.0, 3.0])
+    with obs.span("s", k=1):
+        pass
+    snap = obs.snapshot()
+    assert snap == {"counters": {}, "gauges": {}, "histograms": {}}
+    assert obs.trace_events()["traceEvents"] == []
+    assert obs.value("x") == 0
+
+
+def test_disabled_span_is_shared_null_singleton():
+    a, b = obs.span("a"), obs.span("b", attr=1)
+    assert a is b                   # no per-call allocation when off
+
+
+def test_scoped_restores_prior_state():
+    assert not obs.is_enabled()
+    with obs.scoped():
+        assert obs.is_enabled()
+        with obs.scoped(on=False):
+            assert not obs.is_enabled()
+        assert obs.is_enabled()
+    assert not obs.is_enabled()
+
+
+# -------------------------------------------------------------- metrics
+
+def test_counter_gauge_roundtrip():
+    with obs.scoped():
+        obs.count("c")
+        obs.count("c", 4)
+        obs.gauge("g", 2.0)
+        obs.gauge("g", 7.5)         # last write wins
+    snap = obs.snapshot()
+    assert snap["counters"]["c"] == 5
+    assert snap["gauges"]["g"] == 7.5
+    assert obs.value("c") == 5      # readable even while disabled
+
+
+def test_histogram_percentiles_match_numpy():
+    rng = np.random.default_rng(0)
+    vals = rng.exponential(size=501)
+    h = Histogram()
+    h.extend(vals)
+    s = h.summary()
+    assert s["count"] == 501
+    np.testing.assert_allclose(s["p50"], np.percentile(vals, 50))
+    np.testing.assert_allclose(s["p95"], np.percentile(vals, 95))
+    np.testing.assert_allclose(s["p99"], np.percentile(vals, 99))
+    np.testing.assert_allclose(s["mean"], vals.mean())
+    assert s["min"] == vals.min() and s["max"] == vals.max()
+
+
+def test_percentile_edge_cases():
+    assert np.isnan(percentile([], 50))
+    assert percentile([4.0], 99) == 4.0
+    assert percentile([1.0, 2.0], 50) == 1.5
+
+
+def test_empty_histogram_summary():
+    assert Histogram().summary() == {"count": 0}
+
+
+def test_registry_snapshot_is_json_serializable_and_sorted():
+    r = Registry()
+    r.counter("b").inc()
+    r.counter("a").inc(2)
+    r.histogram("h").observe(1.0)
+    snap = json.loads(json.dumps(r.snapshot()))
+    assert list(snap["counters"]) == ["a", "b"]
+    assert snap["histograms"]["h"]["count"] == 1
+
+
+# ---------------------------------------------------------------- spans
+
+def test_nested_span_parent_child_ordering():
+    tr = Tracer()
+    with tr.span("outer", case="x"):
+        with tr.span("inner"):
+            pass
+    by_name = {e["name"]: e for e in tr.trace_object()["traceEvents"]}
+    outer, inner = by_name["outer"], by_name["inner"]
+    assert outer["args"]["depth"] == 0 and inner["args"]["depth"] == 1
+    # child lies within the parent's [ts, ts+dur] window (same tid row)
+    assert inner["tid"] == outer["tid"]
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1e-3
+    assert outer["args"]["case"] == "x"
+
+
+def test_span_durations_feed_histograms():
+    with obs.scoped():
+        with obs.span("work"):
+            pass
+        with obs.span("work"):
+            pass
+    assert obs.snapshot()["histograms"]["span/work"]["count"] == 2
+
+
+def test_span_depth_restored_after_exception():
+    tr = Tracer()
+    with pytest.raises(RuntimeError):
+        with tr.span("boom"):
+            raise RuntimeError
+    with tr.span("after"):
+        pass
+    by_name = {e["name"]: e for e in tr.trace_object()["traceEvents"]}
+    assert by_name["after"]["args"]["depth"] == 0
+
+
+def test_chrome_trace_event_json_validity(tmp_path):
+    """The exported file is valid Chrome trace-event JSON: the object
+    form with a traceEvents list of complete ('X') events carrying the
+    required keys with the right types (ts/dur in microseconds)."""
+    with obs.scoped():
+        with obs.span("phase", n=3, label="a b"):
+            with obs.span("leaf"):
+                pass
+    path = tmp_path / "trace.json"
+    obs.write_trace(str(path))
+    with open(path) as f:
+        doc = json.load(f)
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    assert len(events) == 2
+    for ev in events:
+        assert ev["ph"] == "X" and ev["cat"] == "obs"
+        assert isinstance(ev["name"], str)
+        assert isinstance(ev["ts"], float) and isinstance(ev["dur"], float)
+        assert ev["ts"] >= 0 and ev["dur"] >= 0
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+        assert isinstance(ev["args"], dict)
+    # non-JSON-native span args were coerced to strings at record time
+    phase = next(e for e in events if e["name"] == "phase")
+    assert phase["args"]["n"] == 3 and phase["args"]["label"] == "a b"
+
+
+def test_reset_restarts_trace_clock():
+    with obs.scoped():
+        with obs.span("one"):
+            pass
+        obs.reset()
+        with obs.span("two"):
+            pass
+        events = obs.trace_events()["traceEvents"]
+    assert [e["name"] for e in events] == ["two"]
+
+
+# ------------------------------------------------- jit trace-time counts
+
+def test_count_inside_jit_fires_per_trace_not_per_call():
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(x):
+        obs.count("test/retrace/f")
+        return x + 1
+
+    with obs.scoped():
+        f(jnp.zeros(3))
+        f(jnp.ones(3))              # same shape: cached, no retrace
+        assert obs.value("test/retrace/f") == 1
+        f(jnp.zeros(5))             # new shape: one more trace
+        assert obs.value("test/retrace/f") == 2

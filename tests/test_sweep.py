@@ -80,6 +80,36 @@ def test_sweep_cache_misses_on_perturbation(tmp_path):
     assert sweep_cache.load(spec, tmp_path) is not None
 
 
+def test_sweep_cache_corrupt_file_is_a_miss(tmp_path):
+    """Garbage at the cache path (interrupted writer, disk damage) must
+    read as a MISS — the sweep recomputes and overwrites — never raise,
+    and the obs counters must attribute it as corrupt."""
+    from repro import obs
+
+    spec = SweepSpec(**_QUICK)
+    path = sweep_cache.path_for(spec, tmp_path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+
+    corruptions = {
+        "not_a_zip": b"this is not an npz archive at all",
+        "truncated": None,          # filled from a real entry below
+        "empty": b"",
+    }
+    run_sweep(spec, cache_dir=tmp_path)         # write a genuine entry
+    corruptions["truncated"] = path.read_bytes()[:200]
+
+    for kind, payload in corruptions.items():
+        path.write_bytes(payload)
+        with obs.scoped():
+            before = obs.value("sweep/cache/corrupt")
+            assert sweep_cache.load(spec, tmp_path) is None, kind
+            assert obs.value("sweep/cache/corrupt") == before + 1, kind
+        # and the full sweep path recovers by recomputing + overwriting
+        res = run_sweep(spec, cache_dir=tmp_path)
+        assert not res.from_cache
+        assert run_sweep(spec, cache_dir=tmp_path).from_cache
+
+
 def test_sweep_record_order_matches_points(tmp_path):
     spec = SweepSpec(**dict(_QUICK, workloads=("hist", "sort")))
     res = run_sweep(spec, cache_dir=tmp_path)

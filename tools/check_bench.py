@@ -46,7 +46,12 @@ DEFAULT_BASELINE = (
 
 
 def load_artifacts(paths: list[str]) -> dict[str, dict]:
-    """{bench name: metrics} from BENCH_*.json files."""
+    """{bench name: metrics} from BENCH_*.json files.
+
+    Deliberately reads ONLY the flat ``metrics`` section: the schema-2
+    ``telemetry`` sub-object (obs registry snapshot) is observability
+    payload and must never become a regression surface.
+    """
     out: dict[str, dict] = {}
     for p in paths:
         with open(p) as f:
