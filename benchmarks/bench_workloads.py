@@ -8,11 +8,18 @@ generation for the data-dependent workloads at n_elems in {64, 256,
 1024, 2048} on the device-resident path (steady-state: the jit cache is
 warmed first, as every driver's repeat instances see it) and measures
 the device-vs-eager speedup at n_elems=256 — the per-cycle host-sync
-oracle against the one-transfer-per-phase compiled programs.  Metrics
-land in ``BENCH_workloads.json``; ``benchmarks/baseline.json`` gates
-the speedups at >= 10x.
+oracle against the one-transfer-per-phase compiled programs.  The
+megakernel section times the fused op-group path against the device
+path at n=2048 (gated >= 2x: the bulk accounting fold removes the
+per-round host replay), captures an exact n=65536 trace (past the old
+2048 ``trace_elems`` cap), and checks bitwise shard invariance on 2
+forced host devices.  Metrics land in ``BENCH_workloads.json``;
+``benchmarks/baseline.json`` gates the speedups at >= 10x.
 """
 import argparse
+import os
+import subprocess
+import sys
 import time
 
 import numpy as np
@@ -30,6 +37,8 @@ SCALING_WORKLOADS = ("sort", "knn", "hist", "spmv")
 SPEEDUP_WORKLOADS = ("sort", "knn", "hist")     # gated >= 10x at n=256
 SCALING_NS = (64, 256, 1024, 2048)
 QUICK_NS = (64, 256)
+MEGA_N = 2048          # megakernel-vs-device speedup point (gated >= 2x)
+MEGA_BIG_N = 65536     # lifted-clamp point: exact trace past old 2048 cap
 
 
 def rows():
@@ -131,6 +140,77 @@ def scaling_rows(ns, rec: Recorder):
     rec.add(n_scaling_points=len(SCALING_WORKLOADS) * len(ns))
 
 
+_SHARD_CHECK = r"""
+import numpy as np
+from repro.workloads import sort
+rng = np.random.default_rng(0)
+x = rng.integers(0, 256, 2048, dtype=np.uint64)
+runs = {ns: sort.ap_sort(x, m=8, mode="megakernel", n_shards=ns)
+        for ns in (None, 2)}
+v0, c0 = runs[None]
+v1, c1 = runs[2]
+ok = np.array_equal(v0, v1)
+for k in c0:
+    a, b = c0[k], c1[k]
+    ok = ok and (np.array_equal(a, b) if isinstance(a, np.ndarray)
+                 else a == b)
+print("SHARD-INVARIANCE", int(ok))
+"""
+
+
+def megakernel_rows(rec: Recorder):
+    """Megakernel path: wall-clock vs the device-resident path at
+    n=2048, the lifted-clamp n=65536 trace point, and bitwise shard
+    invariance (unsharded vs 2 forced host devices, in a subprocess
+    because ``--xla_force_host_platform_device_count`` must be set
+    before jax initializes).
+
+    Sort is the timing workload — its per-round host replay dominated
+    the device path at n=2048, which is exactly what the megakernel's
+    bulk accounting fold (engine ``charge_bulk``) removes.
+    """
+    call_mk = lambda: registry.trace_counters("sort", MEGA_N,
+                                              mode="megakernel")
+    call_dev = lambda: registry.trace_counters("sort", MEGA_N,
+                                               mode="device")
+    call_mk(), call_dev()                       # warm + compile
+    t_mk = _timed(call_mk)
+    t_dev = _timed(call_dev)
+    speedup = t_dev / t_mk
+    rec.add(megakernel_wall_s_sort_2048=t_mk,
+            device_wall_s_vs_mk_sort_2048=t_dev,
+            megakernel_speedup_x=speedup)
+    print(f"\n# megakernel vs device at n={MEGA_N} (gated >= 2x): "
+          f"device={t_dev:.4f}s megakernel={t_mk:.4f}s "
+          f"speedup={speedup:.1f}x")
+
+    ctr = registry.trace_counters("sort", MEGA_BIG_N, mode="megakernel")
+    t_big = _timed(lambda: registry.trace_counters(
+        "sort", MEGA_BIG_N, mode="megakernel"), repeats=2)
+    rec.add(megakernel_big_n=float(MEGA_BIG_N),
+            megakernel_wall_s_sort_65536=t_big,
+            megakernel_cycles_sort_65536=float(ctr["cycles"]))
+    print(f"# megakernel n={MEGA_BIG_N}: cycles={int(ctr['cycles'])} "
+          f"wall={t_big:.3f}s (old trace_elems cap: 2048)")
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = (os.path.join(root, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", _SHARD_CHECK],
+                          capture_output=True, text=True, env=env,
+                          cwd=root, timeout=600)
+    ok = proc.returncode == 0 and "SHARD-INVARIANCE 1" in proc.stdout
+    if not ok:
+        print(proc.stdout[-2000:], proc.stderr[-2000:], file=sys.stderr)
+    rec.add(shard_invariance_ok=float(ok))
+    print(f"# shard invariance (1 vs 2 devices, bitwise): "
+          f"{'OK' if ok else 'FAIL'}")
+
+
 def obs_overhead(rec: Recorder) -> float:
     """Enabled-vs-disabled telemetry overhead on a warm scaling call.
 
@@ -164,6 +244,7 @@ def main(argv=None):
         rec.add(**{f"cycles_{name}": cycles, f"max_err_{name}": err})
     print("\n# device-resident scaling (speedup gated >= 10x at n=256)")
     scaling_rows(QUICK_NS if args.quick else SCALING_NS, rec)
+    megakernel_rows(rec)
     obs_overhead(rec)
     return rec.finish()
 

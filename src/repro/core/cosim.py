@@ -87,28 +87,32 @@ def trace_from_counters(counters: dict, n_intervals: int,
 
 def trace_elems(size: int) -> int:
     """Small-instance element count for a dataset size: sqrt(N) clamped
-    to [32, 2048].  The lower bound keeps per-phase structure; the upper
-    bound used to be 256 because the eager engine's per-cycle host sync
-    made data-dependent instances dispatch-bound — with the
-    device-resident execution model (workloads/_device.py, one compiled
-    program + one transfer per phase) exact emulation stays cheap well
-    past 2048, and the clamp now only bounds compile time and trace
-    memory.  The ONE sizing rule shared by every driver (run_cosim,
+    to [32, 2^20].  The lower bound keeps per-phase structure; the upper
+    bound has been lifted twice (256 -> 2048 -> 2^20) as the execution
+    model sped up: first the device-resident programs removed the
+    per-cycle host sync, then the megakernel path's fused op groups and
+    bulk host-side accounting (kernels/ap_megakernel, engine
+    ``charge_bulk``) made even million-element exact traces tractable —
+    the clamp now only bounds trace memory, and binds at dataset sizes
+    past 2^40.  The ONE sizing rule shared by every driver (run_cosim,
     run_stack_cosim, repro.sweep) so the same nominal scenario always
     replays the same trace."""
-    return int(min(max(math.sqrt(size), 32), 2048))
+    return int(min(max(math.sqrt(size), 32), 1 << 20))
 
 
 @functools.lru_cache(maxsize=None)
 def ap_workload_trace(workload: str, n_intervals: int = 64,
-                      n_elems: int = 64) -> PowerTrace:
+                      n_elems: int = 64,
+                      mode: str = "device") -> PowerTrace:
     """Run a small instance of the named AP workload (any registry entry)
     and bin its measured energy events.  Small instances keep the
     per-phase structure (MAC sweeps, FFT stages, sort extractions) that
-    sets the activity shape; ``n_elems`` scales the instance."""
+    sets the activity shape; ``n_elems`` scales the instance.  ``mode``
+    picks the execution path ("device" / "eager" / "megakernel") —
+    all three are bit-identical, so it only affects capture speed."""
     from repro.workloads import registry
 
-    ctr = registry.trace_counters(workload, n_elems)
+    ctr = registry.trace_counters(workload, n_elems, mode=mode)
     return trace_from_counters(ctr, n_intervals, source=f"ap:{workload}")
 
 

@@ -275,6 +275,10 @@ def bucket_schedule(sched: "PassSchedule"
     cc, ck, wc, wk = sched.cmp_cols, sched.cmp_key, sched.w_cols, sched.w_key
     P, Kc = cc.shape
     Kw = wc.shape[1]
+    if P == 0:
+        raise ValueError(
+            "empty pass schedule (P=0): nothing to bucket — build "
+            "schedules via PassSchedule.build, which rejects empty input")
     Kc2, Kw2, P2 = _next_pow2(Kc), _next_pow2(Kw), _next_pow2(P)
 
     def pad_cols(a, K2):
@@ -296,20 +300,42 @@ def bucket_schedule(sched: "PassSchedule"
 class APEngine:
     """One Associative Processing array: n_words PUs x n_bits columns."""
 
+    BACKENDS = ("jnp", "pallas", "megakernel", "megakernel_pallas")
+
     def __init__(self, n_words: int, n_bits: int = 256,
                  power: PowerParams = PAPER_POWER, collect_stats: bool = True,
-                 backend: str = "jnp"):
-        if backend not in ("jnp", "pallas"):
+                 backend: str = "jnp", n_shards: int | None = None):
+        if backend not in self.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}")
+        if n_shards is not None:
+            if backend != "megakernel":
+                raise ValueError(
+                    "n_shards requires backend='megakernel' (lane sharding "
+                    "is a megakernel execution mode)")
+            if bp.n_lanes(n_words) % n_shards != 0:
+                raise ValueError(
+                    f"n_lanes={bp.n_lanes(n_words)} not divisible by "
+                    f"n_shards={n_shards}; pick n_words a multiple of "
+                    f"{bp.LANE * n_shards}")
         self.n_words = n_words
         self.n_bits = n_bits
         self.power = power
         self.collect_stats = collect_stats
         self.backend = backend
+        self.n_shards = n_shards
         self.planes = bp.alloc_planes(n_bits, n_words)
         self.tag = jnp.zeros(bp.n_lanes(n_words), jnp.uint32)
         self.alloc = FieldAllocator(n_bits)
         self.reset_counters()
+
+    @property
+    def mesh(self):
+        """The 1D 'lanes' device mesh when sharded, else None (cached
+        per shard count so jitted sharded runners are reused)."""
+        if self.n_shards is None:
+            return None
+        from repro.parallel.sharding import ap_mesh
+        return ap_mesh(self.n_shards)
 
     # ----------------------------------------------------------------- state
     def reset_counters(self):
@@ -455,6 +481,47 @@ class APEngine:
             self.events["write"] += int((kw * mf).sum())
             self.events["miswrite"] += int((kw * (n - mf)).sum())
 
+    def charge_bulk(self, *, cycles: int = 0, compare_cycles: int = 0,
+                    write_cycles: int = 0, read_cycles: int = 0,
+                    energy_terms=None, trace_cycles=None, trace_energy=None,
+                    match: int = 0, mismatch: int = 0, write: int = 0,
+                    miswrite: int = 0) -> None:
+        """Fold a precomputed bulk replay block into the accounting.
+
+        The vectorized counterpart of a ``charge_*`` call sequence
+        (megakernel replay uses it to retire thousands of events in one
+        call).  Bit-identity contract the callers uphold and the
+        property harness enforces:
+
+        * ``energy_terms`` (float64[n]) lists the scalar values the
+          equivalent charge sequence would have added to ``energy``, in
+          order — one term per scalar event, one PRE-SUMMED term per
+          ``charge_run`` chunk (``np.sum`` is pairwise, so chunk sums
+          must be taken per chunk, never globally).  The fold here is a
+          seeded ``np.cumsum``, which accumulates float64 strictly
+          sequentially — identical to the scalar ``+=`` loop.
+        * ``trace_cycles``/``trace_energy`` are the absolute-cycle /
+          per-event energy arrays in eager append order; they land as
+          ONE trace chunk, which concatenates to the same flat arrays.
+        * counter/event deltas are exact ints.
+        """
+        self.cycles += int(cycles)
+        self.compare_cycles += int(compare_cycles)
+        self.write_cycles += int(write_cycles)
+        self.read_cycles += int(read_cycles)
+        if not self.collect_stats:
+            return
+        if energy_terms is not None and len(energy_terms):
+            self.energy = float(np.cumsum(np.concatenate(
+                [[self.energy], np.asarray(energy_terms, np.float64)]))[-1])
+        if trace_cycles is not None and len(trace_cycles):
+            self._trace_cycles.append(np.asarray(trace_cycles, np.int64))
+            self._trace_energy.append(np.asarray(trace_energy, np.float64))
+        self.events["match"] += int(match)
+        self.events["mismatch"] += int(mismatch)
+        self.events["write"] += int(write)
+        self.events["miswrite"] += int(miswrite)
+
     def clear(self, field: Field) -> None:
         self.bwrite(field.cols(), [0] * field.width)
 
@@ -485,6 +552,14 @@ class APEngine:
             from repro.kernels.ap_match import ops as _ap_ops
             self.planes, matched = _ap_ops.run_schedule(
                 self.planes, cc, ck, wc, wk, backend="pallas")
+        elif self.backend in ("megakernel", "megakernel_pallas"):
+            from repro.kernels.ap_megakernel import OpGroup, ops as _mk_ops
+            mk_backend = ("pallas" if self.backend == "megakernel_pallas"
+                          else "jnp")
+            self.planes, self.tag, matched = _mk_ops.run_group(
+                self.planes, self.tag,
+                OpGroup.from_schedule(cc, ck, wc, wk),
+                backend=mk_backend, mesh=self.mesh)
         else:
             self.planes, matched = _run_schedule(
                 self.planes, jnp.asarray(cc), jnp.asarray(ck),

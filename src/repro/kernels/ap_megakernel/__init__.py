@@ -1,0 +1,4 @@
+from repro.kernels.ap_megakernel.ops import run_group  # noqa: F401
+from repro.kernels.ap_megakernel.ref import (  # noqa: F401
+    MAX_COND, OP_CMP, OP_CMP_TAG, OP_PASS, OP_WRITE, OpGroup, counter_delta,
+    group_scan)

@@ -1,0 +1,226 @@
+"""The AP megakernel op-group model + pure-jnp reference executor.
+
+A *group* is a static micro-program over one AP array: a table of ops,
+each one silicon cycle-accurate against :mod:`repro.core.engine`'s
+``state_compare`` / ``state_write`` / ``state_run`` chain:
+
+* ``OP_PASS``     — COMPARE + tagged WRITE with the *fresh* match tag
+                    (one schedule pass; the persistent TAG is untouched)
+* ``OP_CMP``      — COMPARE into the persistent TAG
+* ``OP_CMP_TAG``  — COMPARE ANDed into the persistent TAG
+                    (``restrict_to_tag=True``)
+* ``OP_WRITE``    — tagged WRITE using the persistent TAG
+
+plus two execution predicates that make data-dependent inner loops
+(the sort/knn response-counter branches) expressible as a *static*
+table with on-device control flow:
+
+* ``cond[p] == 0`` — always execute;
+* ``cond[p] == k`` (k in 1..MAX_COND) — execute iff the op ``k`` slots
+  back matched at least one row (``matched[p-k] > 0``, the response
+  counter the paper's controller branches on);
+
+and a dynamic ``enabled[p]`` mask for shape-bucketed padding (a
+disabled op leaves all state untouched and reports ``matched = 0``).
+
+``matched[p]`` is the popcount of the tag the op acted with — the fresh
+compare tag for PASS/CMP ops, the persistent TAG for WRITE — i.e.
+exactly what the eager engine's per-cycle host sync would read.  Under
+a ``shard_map`` over the packed word-lane axis, popcounts are
+``psum``-reduced over ``axis_name`` before any predicate consumes them,
+so branch decisions (and therefore every plane/tag bit) are invariant
+to the device count: integer addition is exact in any order.
+
+This module is the semantic reference (and the CPU lowering — one
+fused ``lax.scan`` program); :mod:`.kernel` is the Pallas TPU kernel
+with the plane tile VMEM-resident across the whole group, and
+:mod:`.ops` dispatches between them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bitplane as bp
+
+OP_PASS, OP_CMP, OP_CMP_TAG, OP_WRITE = 0, 1, 2, 3
+
+#: deepest conditional lookback a group may use (static scan-carry window)
+MAX_COND = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class OpGroup:
+    """A static AP micro-program (host-side numpy tables).
+
+    Column tables are padded by repeating entry 0, which is idempotent
+    for both compare (re-ANDing an identical XNOR term) and write
+    (re-storing the same value) — the :class:`~repro.core.engine.PassSchedule`
+    padding contract.  WRITE ops carry a dummy compare column (col 0,
+    key 0) and CMP ops a dummy write column; the executors never apply
+    the unused half.
+    """
+    op: np.ndarray        # int32[P]
+    cond: np.ndarray      # int32[P]
+    cmp_cols: np.ndarray  # int32[P, Kc]
+    cmp_key: np.ndarray   # uint32[P, Kc]
+    w_cols: np.ndarray    # int32[P, Kw]
+    w_key: np.ndarray     # uint32[P, Kw]
+
+    @property
+    def n_ops(self) -> int:
+        return int(self.op.shape[0])
+
+    @property
+    def conditional(self) -> bool:
+        return bool(self.cond.max(initial=0) > 0)
+
+    def tables(self) -> tuple:
+        """The six device-input arrays, in executor argument order."""
+        return (self.op, self.cond, self.cmp_cols, self.cmp_key,
+                self.w_cols, self.w_key)
+
+    @staticmethod
+    def build(ops: Sequence[tuple]) -> "OpGroup":
+        """ops: (opcode, cond, cmp_cols, cmp_key, w_cols, w_key) per op.
+
+        CMP ops may pass empty write lists and WRITE ops empty compare
+        lists; dummy entries are substituted.  Raises on an empty group
+        and on conditions outside [0, MAX_COND] or reaching before op 0.
+        """
+        if not ops:
+            raise ValueError("empty op group")
+        norm = []
+        for p, (opc, cond, cc, ck, wc, wk) in enumerate(ops):
+            if opc not in (OP_PASS, OP_CMP, OP_CMP_TAG, OP_WRITE):
+                raise ValueError(f"unknown opcode {opc!r}")
+            if not 0 <= cond <= MAX_COND:
+                raise ValueError(f"cond {cond} outside [0, {MAX_COND}]")
+            if cond > p:
+                raise ValueError(f"op {p} cond {cond} reaches before op 0")
+            cc, ck = (list(cc), list(ck)) if len(list(cc)) else ([0], [0])
+            wc, wk = (list(wc), list(wk)) if len(list(wc)) else ([cc[0]], [0])
+            norm.append((opc, cond, cc, ck, wc, wk))
+        Kc = max(len(o[2]) for o in norm)
+        Kw = max(len(o[4]) for o in norm)
+
+        def pad(vals, K):
+            return vals + [vals[0]] * (K - len(vals))
+
+        return OpGroup(
+            np.array([o[0] for o in norm], np.int32),
+            np.array([o[1] for o in norm], np.int32),
+            np.array([pad(o[2], Kc) for o in norm], np.int32),
+            np.array([pad(o[3], Kc) for o in norm], np.uint32),
+            np.array([pad(o[4], Kw) for o in norm], np.int32),
+            np.array([pad(o[5], Kw) for o in norm], np.uint32),
+        )
+
+    @staticmethod
+    def from_schedule(cmp_cols, cmp_key, w_cols, w_key) -> "OpGroup":
+        """A pass schedule (already shape-bucketed) as all-PASS ops."""
+        cmp_cols = np.asarray(cmp_cols, np.int32)
+        P = cmp_cols.shape[0]
+        if P == 0:
+            raise ValueError("empty op group")
+        return OpGroup(np.zeros(P, np.int32) + OP_PASS,
+                       np.zeros(P, np.int32),
+                       cmp_cols, np.asarray(cmp_key, np.uint32),
+                       np.asarray(w_cols, np.int32),
+                       np.asarray(w_key, np.uint32))
+
+    @staticmethod
+    def probes(cols, keys) -> "OpGroup":
+        """A batch of plain COMPAREs (hist bins / spmv reductions)."""
+        cols = np.atleast_2d(np.asarray(cols, np.int32))
+        keys = np.atleast_2d(np.asarray(keys, np.uint32))
+        P = cols.shape[0]
+        if P == 0:
+            raise ValueError("empty op group")
+        return OpGroup(np.zeros(P, np.int32) + OP_CMP,
+                       np.zeros(P, np.int32),
+                       cols, keys, cols[:, :1], np.zeros((P, 1), np.uint32))
+
+
+# ---------------------------------------------------------------------------
+# jnp reference executor
+# ---------------------------------------------------------------------------
+
+def _popcount(row, axis_name=None):
+    n = jax.lax.population_count(row).astype(jnp.int32).sum()
+    if axis_name is not None:
+        n = jax.lax.psum(n, axis_name)
+    return n
+
+
+def group_scan(planes, tag, tables, enabled, axis_name=None):
+    """Execute a whole op group as one fused scan (the megakernel body).
+
+    planes : uint32[n_bits, n_lanes] (the local lane shard, if sharded)
+    tag    : uint32[n_lanes]
+    tables : the 6 OpGroup arrays (device or numpy)
+    enabled: bool[P] dynamic op mask
+    Returns (planes', tag', matched int32[P], executed bool[P]).
+
+    Pure and jit/scan/shard_map-composable: this is both the CPU
+    lowering of the megakernel and the oracle the Pallas kernel is
+    tested against.
+    """
+    op, cond, cc, ck, wc, wk = (jnp.asarray(t) for t in tables)
+    enabled = jnp.asarray(enabled, jnp.bool_)
+
+    def body(carry, xs):
+        planes, tag, hist = carry
+        opc, cnd, en, ccp, ckp, wcp, wkp = xs
+        t_cmp = bp.compare(planes, ccp, ckp)
+        t_cmp = jnp.where(opc == OP_CMP_TAG, t_cmp & tag, t_cmp)
+        is_wr = opc == OP_WRITE
+        wtag = jnp.where(is_wr, tag, t_cmp)
+        m = _popcount(wtag, axis_name)
+        # response-counter predicate: hist holds the last MAX_COND
+        # matched counts, hist[-1] being the previous op's
+        prev = jnp.where(cnd > 0,
+                         hist[jnp.clip(MAX_COND - cnd, 0, MAX_COND - 1)],
+                         jnp.int32(1))
+        ex = en & (prev > 0)
+        do_write = ex & (is_wr | (opc == OP_PASS))
+        written = bp.tagged_write(planes, wtag, wcp, wkp)
+        planes = jnp.where(do_write, written, planes)
+        is_cmp = (opc == OP_CMP) | (opc == OP_CMP_TAG)
+        tag = jnp.where(ex & is_cmp, t_cmp, tag)
+        m_out = jnp.where(ex, m, jnp.int32(0))
+        hist = jnp.concatenate([hist[1:], m_out[None]])
+        return (planes, tag, hist), (m_out, ex)
+
+    hist0 = jnp.zeros(MAX_COND, jnp.int32)
+    (planes, tag, _), (matched, executed) = jax.lax.scan(
+        body, (planes, tag, hist0), (op, cond, enabled, cc, ck, wc, wk))
+    return planes, tag, matched, executed
+
+
+def counter_delta(op, matched, executed):
+    """Packed int32[N_COUNTERS] delta a group contributes on device.
+
+    Mirrors what the ``state_*`` op chain would accumulate: a PASS is a
+    compare + a write cycle, CMP/WRITE one cycle each; every non-WRITE
+    op's matched count feeds CTR_MATCH (``state_write`` never does).
+    """
+    from repro.core import engine as E
+
+    op = jnp.asarray(op)
+    ex = executed.astype(jnp.int32)
+    is_pass = (op == OP_PASS).astype(jnp.int32)
+    is_wr = (op == OP_WRITE).astype(jnp.int32)
+    cycles = (ex * (1 + is_pass)).sum()
+    compares = (ex * (1 - is_wr)).sum()
+    writes = (ex * (is_pass | (op == OP_WRITE)).astype(jnp.int32)).sum()
+    match = (matched * (1 - is_wr)).sum()
+    delta = jnp.zeros(E.N_COUNTERS, jnp.int32)
+    return (delta.at[E.CTR_CYCLES].set(cycles)
+            .at[E.CTR_COMPARE].set(compares)
+            .at[E.CTR_WRITE].set(writes)
+            .at[E.CTR_MATCH].set(match))

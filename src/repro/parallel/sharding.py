@@ -17,6 +17,7 @@ SEQUENCE over 'model' (flash-decoding layout; see attention.py).
 """
 from __future__ import annotations
 
+import functools as _functools
 from typing import Any
 
 import jax
@@ -155,6 +156,28 @@ def sweep_mesh(n_shards: int | None = None):
             f"n_shards={n} out of range for {len(devices)} local "
             f"device(s)")
     return Mesh(np.asarray(devices[:n]), ("cases",))
+
+
+@_functools.lru_cache(maxsize=None)
+def ap_mesh(n_shards: int | None = None):
+    """A 1D mesh of ``n_shards`` local devices over axis 'lanes' — the
+    AP bitplane sharding axis (megakernel backend): plane columns and
+    the TAG register split over the packed word-lane axis, responder
+    popcounts ``psum`` back to every shard.
+
+    Cached so repeated lookups return the *same* Mesh object and the
+    jitted sharded runners (``kernels.ap_megakernel.ops``) are reused.
+    Validation matches :func:`sweep_mesh`: over-subscription raises.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+    devices = jax.devices()
+    n = len(devices) if n_shards is None else n_shards
+    if not 1 <= n <= len(devices):
+        raise ValueError(
+            f"n_shards={n} out of range for {len(devices)} local "
+            f"device(s)")
+    return Mesh(np.asarray(devices[:n]), ("lanes",))
 
 
 def pad_case_batch(batch: Any, n_shards: int) -> tuple[Any, int]:

@@ -126,7 +126,8 @@ def _run_group(spec: SweepSpec, points: list[SweepPoint], n_dram: int,
             wl = M.WORKLOADS[p.workload]
             for mc in spec.machines:
                 trace = cosim.ap_workload_trace(
-                    p.workload, spec.n_intervals, spec.trace_elems(p.size)) \
+                    p.workload, spec.n_intervals, spec.trace_elems(p.size),
+                    mode=spec.ap_backend) \
                     if mc == "ap" else \
                     cosim.simd_phase_trace(wl, dp, spec.n_intervals)
                 keys.append((p, mc))

@@ -22,7 +22,13 @@ import json
 # 2: solver/n_mg fields (selectable multigrid inner solve, ISSUE 4).
 # 3: device-resident AP engine — trace_elems clamp 256 -> 2048 and
 #    instance-scaled histogram bins re-derive every workload trace.
-CACHE_SCHEMA = 3
+# 4: ap_backend field (megakernel trace capture) and trace_elems clamp
+#    2048 -> 2^20; traces at sizes past 2048^2 change element counts.
+CACHE_SCHEMA = 4
+
+#: trace-capture execution paths for the AP workloads (all bit-exact;
+#: the field exists so a spec records how its traces were captured)
+AP_BACKENDS = ("device", "eager", "megakernel")
 
 #: inner-solver axis for the implicit replay steps (engine.py resolves
 #: it through ``thermal.implicit_lhs_solver``): fixed-iteration
@@ -69,6 +75,12 @@ class SweepSpec:
     # is part of the spec and the cache key — unlike the shard count,
     # which is a pure execution detail and deliberately NOT a field
     n_mg: int = 3         # V-cycles per step when solver == "mg"
+    ap_backend: str = "device"   # AP trace-capture path (AP_BACKENDS);
+    # every path is pinned bit-identical by the differential tests, so
+    # this cannot change results — it is a spec field (and thus part of
+    # the cache key) anyway so a cache entry records exactly how its
+    # traces were produced, and because the schema-4 megakernel path is
+    # what makes the lifted trace_elems clamp affordable
 
     def __post_init__(self):
         from repro.workloads import registry
@@ -93,6 +105,9 @@ class SweepSpec:
                              f"expected one of {SOLVERS}")
         if self.n_mg < 1:
             raise ValueError("n_mg must be >= 1")
+        if self.ap_backend not in AP_BACKENDS:
+            raise ValueError(f"unknown ap_backend {self.ap_backend!r}; "
+                             f"expected one of {AP_BACKENDS}")
 
     # -------------------------------------------------------------- points
     def points(self) -> tuple[SweepPoint, ...]:

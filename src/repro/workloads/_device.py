@@ -25,6 +25,7 @@ bit-identical to the eager per-cycle oracle
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 
 import jax
@@ -37,6 +38,8 @@ from repro.core import isa
 from repro.core import engine as E
 from repro.core.bitplane import Field
 from repro.core.engine import APEngine, PassSchedule, _next_pow2
+from repro.kernels.ap_megakernel import ref as mk_ref
+from repro.kernels.ap_megakernel import ops as mk_ops
 
 
 # ---------------------------------------------------------------------------
@@ -227,4 +230,330 @@ def count_probes(eng: APEngine, cols, keys) -> np.ndarray:
     eng.adopt(state)
     for i in range(n_probes):
         eng.charge_compare(k, counts[i])
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# megakernel mode: op-group device programs + bulk (vectorized) host replay
+# ---------------------------------------------------------------------------
+#
+# The device programs above already run resident; at n_elems >= ~2048 the
+# wall-clock is dominated by the *host* side — per-event charge_* Python
+# loops and per-scalar trace appends.  The megakernel mode attacks both
+# ends: one fused op-group program per phase on device (the whole
+# min-extraction round is a single OpGroup executed by the megakernel,
+# optionally shard_map-ed over the lane axis), and ONE vectorized
+# charge_bulk fold on the host, built to be bit-identical to the eager
+# per-event replay (see APEngine.charge_bulk for the contract; the
+# property harness enforces it sample by sample).
+
+
+def engine_backend(backend: str, mode: str) -> str:
+    """Map a workload (backend, mode) pair to the APEngine backend.
+
+    ``mode="megakernel"`` lowers the engine's schedule path through the
+    megakernel too: jnp -> 'megakernel' (fused scan, shardable),
+    pallas -> 'megakernel_pallas' (the Pallas kernel)."""
+    if mode != "megakernel":
+        return backend
+    if backend in ("jnp", "megakernel"):
+        return "megakernel"
+    if backend in ("pallas", "megakernel_pallas"):
+        return "megakernel_pallas"
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def _min_extract_group(copy_sched: PassSchedule, val: Field, active: Field,
+                       cand: Field, readout: bool) -> mk_ref.OpGroup:
+    """One min-extraction round as a static op group.
+
+    Table layout (indices the trace decoder below relies on):
+    [0, P_copy)            PASS     the cand <- active copy schedule
+    P_copy + 3*pos + 0     CMP      probe (cand, val_bit)==(1, 0) -> m1
+    P_copy + 3*pos + 1     CMP      retire probe ==(1, 1), iff m1 > 0
+    P_copy + 3*pos + 2     WRITE    cand <- 0,              iff m1 > 0
+    P_copy + 3*m           CMP      tie group (cand == 1) -> count
+    then sort: WRITE active <- 0 iff count > 0
+    or   knn: CMP cand == 1; WRITE active <- 0 (both unconditional;
+    the sequential responder read rides the scan wrapper's counters).
+    """
+    ops = []
+    for p in range(copy_sched.n_passes):
+        ops.append((mk_ref.OP_PASS, 0,
+                    copy_sched.cmp_cols[p].tolist(),
+                    copy_sched.cmp_key[p].tolist(),
+                    copy_sched.w_cols[p].tolist(),
+                    copy_sched.w_key[p].tolist()))
+    c0 = cand.col(0)
+    for i in reversed(range(val.width)):
+        cv = [c0, val.col(i)]
+        ops.append((mk_ref.OP_CMP, 0, cv, [1, 0], [], []))
+        ops.append((mk_ref.OP_CMP, 1, cv, [1, 1], [], []))
+        ops.append((mk_ref.OP_WRITE, 2, [], [], [c0], [0]))
+    ops.append((mk_ref.OP_CMP, 0, [c0], [1], [], []))
+    if readout:
+        ops.append((mk_ref.OP_CMP, 0, [c0], [1], [], []))
+        ops.append((mk_ref.OP_WRITE, 0, [], [], [active.col(0)], [0]))
+    else:
+        ops.append((mk_ref.OP_WRITE, 1, [], [], [active.col(0)], [0]))
+    return mk_ref.OpGroup.build(ops)
+
+
+def _mk_rounds_impl(state, op, cond, cc, ck, wc, wk, remaining, rounds,
+                    readout, axis_name):
+    """Scan ``rounds`` op-group executions with the same termination /
+    masking semantics as ``_min_extract_program`` (shard_map-able)."""
+    count_idx = op.shape[0] - (3 if readout else 2)
+    enabled = jnp.ones(op.shape[0], jnp.bool_)
+
+    def body(carry, _):
+        st0, done, rem = carry
+        planes, tag, matched, executed = mk_ref.group_scan(
+            st0.planes, st0.tag, (op, cond, cc, ck, wc, wk), enabled,
+            axis_name)
+        delta = mk_ref.counter_delta(op, matched, executed)
+        count = matched[count_idx]
+        if readout:
+            delta = delta.at[E.CTR_CYCLES].add(count) \
+                .at[E.CTR_READ].add(count)
+        st = E.APState(planes, tag, st0.counters + delta)
+        new_rem = rem - count
+        st_out = E.select_state(done, st0, st)
+        rem_out = jnp.where(done, rem, new_rem)
+        done_out = done | (count == 0) | (new_rem <= 0)
+        ys = (matched, tag, done)
+        return (st_out, done_out, rem_out), ys
+
+    init = (state, jnp.bool_(False), jnp.asarray(remaining, jnp.int32))
+    (state, _, _), ys = jax.lax.scan(body, init, None, length=rounds)
+    return state, ys
+
+
+@partial(jax.jit, static_argnames=("rounds", "readout"))
+def _mk_rounds_program(state, op, cond, cc, ck, wc, wk, remaining, *,
+                       rounds, readout):
+    obs.count("workloads/retrace/min_extract_mk")
+    obs.count(f"workloads/retrace/min_extract_mk[P={op.shape[0]},"
+              f"rounds={rounds},readout={readout}]")
+    return _mk_rounds_impl(state, op, cond, cc, ck, wc, wk, remaining,
+                           rounds, readout, axis_name=None)
+
+
+@functools.lru_cache(maxsize=None)
+def _mk_rounds_sharded(mesh, rounds, readout):
+    """jit(shard_map(...)) of the rounds program over the 'lanes' axis,
+    cached per (mesh, shape) so re-runs reuse the compiled program."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    st_spec = E.APState(P(None, "lanes"), P("lanes"), P())
+    rep = P()
+
+    def body(state, op, cond, cc, ck, wc, wk, remaining):
+        return _mk_rounds_impl(state, op, cond, cc, ck, wc, wk, remaining,
+                               rounds, readout, axis_name="lanes")
+
+    mapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(st_spec, rep, rep, rep, rep, rep, rep, rep),
+        out_specs=(st_spec, (rep, P(None, "lanes"), rep)),
+        check_rep=False)
+
+    @jax.jit
+    def run(state, op, cond, cc, ck, wc, wk, remaining):
+        obs.count("workloads/retrace/min_extract_mk_sharded")
+        return mapped(state, op, cond, cc, ck, wc, wk, remaining)
+
+    return run
+
+
+def min_extract_rounds_mk(eng: APEngine, val: Field, active: Field,
+                          cand: Field, rounds: int, remaining: int,
+                          readout: bool = False) -> MinExtractTrace:
+    """Megakernel counterpart of :func:`min_extract_rounds`: each round
+    is ONE fused op-group execution (sharded over lanes when the engine
+    has ``n_shards``), returning the identical :class:`MinExtractTrace`
+    so the replay layer is shared."""
+    copy_sched = isa.copy(cand, active)
+    group = _min_extract_group(copy_sched, val, active, cand, readout)
+    obs.count("kernels/launch/ap_megakernel")
+    obs.count("kernels/launch/ap_megakernel/min_extract_rounds")
+    tables = tuple(jnp.asarray(t) for t in group.tables())
+    if eng.mesh is not None:
+        state, ys = _mk_rounds_sharded(eng.mesh, rounds, readout)(
+            eng.state(), *tables, jnp.asarray(remaining, jnp.int32))
+    else:
+        state, ys = _mk_rounds_program(eng.state(), *tables, remaining,
+                                       rounds=rounds, readout=readout)
+    matched, tie_tag, masked = (np.asarray(a) for a in jax.device_get(ys))
+    ctr = np.asarray(jax.device_get(state.counters))
+    eng.adopt(state)
+    Pc = copy_sched.n_passes
+    m = val.width
+    base = Pc + 3 * np.arange(m)
+    m1 = matched[:, base]
+    m2 = matched[:, base + 1]
+    return MinExtractTrace(copy_sched, matched[:, :Pc], m1, m2, m1 > 0,
+                           matched[:, Pc + 3 * m], tie_tag, masked, ctr)
+
+
+def replay_extract_bulk(eng: APEngine, tr: MinExtractTrace, m: int,
+                        budget: int, readout: bool = False
+                        ) -> tuple[np.ndarray, np.ndarray, int]:
+    """Charge every replayed round's events in ONE bulk fold.
+
+    Replays exactly the rounds (and the per-round tails) the eager
+    per-round loop would — sort: conditional tie-group retire, stop on
+    a zero count; knn (``readout=True``): responder reads + re-compare
+    + retire, stop when ``budget`` indices have been emitted — and
+    folds them through :meth:`APEngine.charge_bulk`.  Returns
+    (min_values[r_used], tie_counts[r_used], r_used); values follow
+    from the recorded branch decisions (bit i of the round's minimum is
+    1 iff the 0-probe at bit i had no responders).
+    """
+    counts = tr.count.astype(np.int64)
+    R = counts.shape[0]
+    r_used, out_len, tail = 0, 0, []
+    if readout:
+        while out_len < budget:
+            out_len += min(int(counts[r_used]), budget - out_len)
+            tail.append(True)
+            r_used += 1
+    else:
+        while out_len < budget and r_used < R:
+            c = int(counts[r_used])
+            tail.append(c > 0)
+            r_used += 1
+            if c == 0:
+                break
+            out_len += c
+    if r_used == 0:
+        return np.zeros(0, np.uint64), counts[:0], 0
+
+    Ru = r_used
+    n = eng.n_words
+    pw = eng.power
+    sched = tr.copy_sched
+    Pc = sched.n_passes
+    take = tr.take[:Ru]                              # [Ru, m] bool
+    cnt = counts[:Ru]
+    tailp = np.asarray(tail, bool)
+
+    # --- per-round scalar slots after the copy chunk:
+    #     [cmp1, cmp2?, wr?] x m, count_cmp, then the tail
+    S = 3 * m + (4 if readout else 2)
+    present = np.zeros((Ru, S), bool)
+    e_scal = np.zeros((Ru, S), np.float64)
+    is_trace = np.ones(S, bool)
+    c1, c2, wr = (3 * np.arange(m) + d for d in (0, 1, 2))
+    present[:, c1] = True
+    present[:, c2] = take
+    present[:, wr] = take
+    ci = 3 * m
+    present[:, ci] = True
+    if readout:
+        rd, rc, rt = ci + 1, ci + 2, ci + 3
+        present[:, rd:] = True
+        is_trace[rd] = False                         # reads carry no event
+    else:
+        rt = ci + 1
+        present[:, rt] = tailp
+    delta = present.astype(np.int64)                 # cycles per slot
+    if readout:
+        delta[:, rd] = np.where(present[:, rd], cnt, 0)
+
+    m1f = tr.m1[:Ru].astype(np.float64)
+    m2f = tr.m2[:Ru].astype(np.float64)
+    cf = cnt.astype(np.float64)
+    e_scal[:, c1] = 2 * (pw.p_m * m1f + pw.p_mm * (n - m1f))
+    e_scal[:, c2] = 2 * (pw.p_m * m2f + pw.p_mm * (n - m2f))
+    e_scal[:, wr] = 1 * (pw.p_w * m2f + pw.p_mw * (n - m2f))
+    e_scal[:, ci] = 1 * (pw.p_m * cf + pw.p_mm * (n - cf))
+    if readout:
+        e_scal[:, rc] = 1 * (pw.p_m * cf + pw.p_mm * (n - cf))
+    e_scal[:, rt] = 1 * (pw.p_w * cf + pw.p_mw * (n - cf))
+
+    # --- the copy chunk: per-pass energies exactly as charge_run
+    kc = sched.kc.astype(np.float64)
+    kw = sched.kw.astype(np.float64)
+    mf = tr.copy_matched[:Ru].astype(np.float64)     # [Ru, Pc]
+    e_pass = kc[None, :] * (pw.p_m * mf + pw.p_mm * (n - mf)) \
+        + kw[None, :] * (pw.p_w * mf + pw.p_mw * (n - mf))
+    chunk = e_pass.sum(axis=1)    # row-wise: identical to charge_run's 1D sum
+
+    # --- absolute event cycles (post-increment, as eager appends them)
+    round_delta = 2 * Pc + delta.sum(axis=1)
+    c_start = eng.cycles + np.concatenate(
+        [[0], np.cumsum(round_delta)[:-1]]).astype(np.int64)
+    pass_cyc = c_start[:, None] + 2 * np.arange(1, Pc + 1, dtype=np.int64)
+    scal_cyc = c_start[:, None] + 2 * Pc + np.cumsum(delta, axis=1)
+
+    ev_present = present & is_trace[None, :]
+    all_present = np.hstack([np.ones((Ru, Pc), bool), ev_present])
+    trace_c = np.hstack([pass_cyc, scal_cyc])[all_present]
+    trace_e = np.hstack([e_pass, e_scal])[all_present]
+    terms = np.hstack([chunk[:, None], e_scal])[
+        np.hstack([np.ones((Ru, 1), bool), ev_present])]
+
+    m1s = tr.m1[:Ru].astype(np.int64)
+    m2s = tr.m2[:Ru].astype(np.int64)
+    n_cmp = int(present[:, c1].sum() + present[:, c2].sum()
+                + present[:, ci].sum()
+                + (present[:, rc].sum() if readout else 0))
+    n_wr_ev = int(present[:, wr].sum() + present[:, rt].sum())
+    match_sc = int(m1s.sum() + m2s[take].sum() + cnt.sum()
+                   + (cnt.sum() if readout else 0))
+    write_sc = int(m2s[take].sum() + cnt[tailp].sum())
+    eng.charge_bulk(
+        cycles=int(round_delta.sum()),
+        compare_cycles=Pc * Ru + n_cmp,
+        write_cycles=Pc * Ru + n_wr_ev,
+        read_cycles=int(cnt.sum()) if readout else 0,
+        energy_terms=terms, trace_cycles=trace_c, trace_energy=trace_e,
+        match=int(mf.sum()) + match_sc,
+        mismatch=(Pc * Ru + n_cmp) * n - (int(mf.sum()) + match_sc),
+        write=int((kw[None, :] * mf).sum()) + write_sc,
+        miswrite=int((kw[None, :] * (n - mf)).sum())
+        + (n_wr_ev * n - write_sc))
+
+    weights = np.uint64(1) << (m - 1 - np.arange(m, dtype=np.uint64))
+    values = ((~take) * weights[None, :]).sum(axis=1, dtype=np.uint64)
+    return values, cnt, r_used
+
+
+def count_probes_mk(eng: APEngine, cols, keys) -> np.ndarray:
+    """Megakernel counterpart of :func:`count_probes`: the whole probe
+    batch is ONE op-group launch (CMP ops, padded probes disabled via
+    the ``enabled`` mask; sharded over lanes when the engine has
+    ``n_shards``), and all compare cycles are charged in one bulk fold.
+    """
+    cols = np.atleast_2d(np.asarray(cols, np.int32))
+    keys = np.atleast_2d(np.asarray(keys, np.uint32))
+    n_probes, k = cols.shape
+    np2, k2 = _next_pow2(n_probes), _next_pow2(k)
+
+    def pad(a):
+        if k2 != k:
+            a = np.concatenate(
+                [a, np.repeat(a[:, :1], k2 - k, axis=1)], axis=1)
+        if np2 != n_probes:
+            a = np.concatenate(
+                [a, np.repeat(a[-1:], np2 - n_probes, axis=0)], axis=0)
+        return a
+
+    group = mk_ref.OpGroup.probes(pad(cols), pad(keys))
+    enabled = np.arange(np2) < n_probes
+    eng.planes, eng.tag, matched = mk_ops.run_group(
+        eng.planes, eng.tag, group, enabled, mesh=eng.mesh)
+    counts = np.asarray(jax.device_get(matched))[:n_probes].astype(np.int64)
+
+    cf = counts.astype(np.float64)
+    e = k * (eng.power.p_m * cf + eng.power.p_mm * (eng.n_words - cf))
+    eng.charge_bulk(
+        cycles=n_probes, compare_cycles=n_probes,
+        energy_terms=e,
+        trace_cycles=eng.cycles + np.arange(1, n_probes + 1, dtype=np.int64),
+        trace_energy=e,
+        match=int(counts.sum()),
+        mismatch=n_probes * eng.n_words - int(counts.sum()))
     return counts

@@ -27,16 +27,18 @@ def plan_bits(m: int) -> int:
 
 
 def ap_histogram(x: np.ndarray, n_bins: int, m: int = 8,
-                 backend: str = "jnp",
-                 mode: str = "device") -> tuple[np.ndarray, dict]:
+                 backend: str = "jnp", mode: str = "device",
+                 n_shards: int | None = None) -> tuple[np.ndarray, dict]:
     """Histogram of unsigned ``x`` (< 2^m) into ``n_bins`` equal bins.
 
     ``n_bins`` must be a power of two dividing 2^m.  Returns
     (counts[n_bins], engine counters).  Exact.  ``mode="device"`` runs
     all bin probes as one compiled program (one host transfer);
-    ``mode="eager"`` is the per-bin-sync oracle.
+    ``mode="eager"`` is the per-bin-sync oracle; ``mode="megakernel"``
+    runs the probe batch as one fused op-group launch with bulk
+    accounting (``n_shards`` shards the bitplanes over lanes).
     """
-    if mode not in ("device", "eager"):
+    if mode not in ("device", "eager", "megakernel"):
         raise ValueError(f"unknown mode {mode!r}")
     x = np.asarray(x, np.uint64)
     n = x.shape[0]
@@ -47,7 +49,9 @@ def ap_histogram(x: np.ndarray, n_bins: int, m: int = 8,
         raise ValueError("n_bins must be a power of two in [2, 2^m]")
 
     n_words = max(((n + 31) // 32) * 32, 32)
-    eng = APEngine(n_words=n_words, n_bits=plan_bits(m), backend=backend)
+    eng = APEngine(n_words=n_words, n_bits=plan_bits(m),
+                   backend=_device.engine_backend(backend, mode),
+                   n_shards=n_shards)
     val = eng.alloc.alloc(m, "val")
     buf = np.zeros(n_words, np.uint64)
     # padding rows hold the value 2^m - 1 shifted out of every bin probe?
@@ -61,7 +65,11 @@ def ap_histogram(x: np.ndarray, n_bins: int, m: int = 8,
     counts = np.zeros(n_bins, np.int64)
     cols = [val.col(i) for i in range(m - b, m)]   # top b columns
     keys = [[(k >> i) & 1 for i in range(b)] for k in range(n_bins)]
-    if mode == "device":
+    if mode == "megakernel":
+        counts[:] = _device.count_probes_mk(
+            eng, np.tile(np.asarray(cols, np.int32), (n_bins, 1)),
+            np.asarray(keys, np.uint32))
+    elif mode == "device":
         counts[:] = _device.count_probes(
             eng, np.tile(np.asarray(cols, np.int32), (n_bins, 1)),
             np.asarray(keys, np.uint32))

@@ -36,17 +36,18 @@ def plan_bits(d: int, m: int, n: int) -> int:
 
 
 def ap_knn(db: np.ndarray, q: np.ndarray, k: int, m: int = 4,
-           backend: str = "jnp", mode: str = "device"
-           ) -> tuple[np.ndarray, dict]:
+           backend: str = "jnp", mode: str = "device",
+           n_shards: int | None = None) -> tuple[np.ndarray, dict]:
     """Indices of the k nearest rows of ``db`` to ``q`` (L1, ascending).
 
     db: uint [n, d] with entries < 2^m; q: uint [d].  Returns
     (indices[k], engine counters).  Exact; ties by row order.
     ``mode="device"`` runs the k min-extraction rounds (including the
     responder readout) as one compiled program; ``mode="eager"`` is the
-    per-cycle oracle.
+    per-cycle oracle; ``mode="megakernel"`` fuses each round into one
+    op-group launch with bulk accounting (``n_shards`` shards lanes).
     """
-    if mode not in ("device", "eager"):
+    if mode not in ("device", "eager", "megakernel"):
         raise ValueError(f"unknown mode {mode!r}")
     db = np.asarray(db, np.uint64)
     q = np.asarray(q, np.uint64)
@@ -60,7 +61,8 @@ def ap_knn(db: np.ndarray, q: np.ndarray, k: int, m: int = 4,
     idx_w = max(1, int(np.ceil(np.log2(max(n, 2)))))
     n_words = max(((n + 31) // 32) * 32, 32)
     eng = APEngine(n_words=n_words, n_bits=plan_bits(d, m, n),
-                   backend=backend)
+                   backend=_device.engine_backend(backend, mode),
+                   n_shards=n_shards)
     a = eng.alloc
     feat = [a.alloc(m, f"f{j}") for j in range(d)]
     diff = a.alloc(m, "diff")
@@ -91,7 +93,16 @@ def ap_knn(db: np.ndarray, q: np.ndarray, k: int, m: int = 4,
 
     # k min-extractions; winners read out their index field
     out: list[int] = []
-    if mode == "device":
+    if mode == "megakernel":
+        idx_vals = pad(np.arange(n))
+        tr = _device.min_extract_rounds_mk(eng, acc, active, cand, rounds=k,
+                                           remaining=k, readout=True)
+        _, _, r_used = _device.replay_extract_bulk(eng, tr, acc.width,
+                                                   budget=k, readout=True)
+        for r in range(r_used):
+            rows = _device.tagged_rows(tr.tie_tag[r])
+            out.extend(int(v) for v in idx_vals[rows][:k - len(out)])
+    elif mode == "device":
         idx_vals = pad(np.arange(n))            # idx field is never written
         tr = _device.min_extract_rounds(eng, acc, active, cand, rounds=k,
                                         remaining=k, readout=True)

@@ -30,9 +30,10 @@ class WorkloadDef:
     ``run_small(n, mode)`` executes an ~n-element instance and returns
     engine counters with trace events; ``paper`` marks the original
     §3.1 trio.  ``mode`` selects device-resident execution ("device",
-    the default) or the per-cycle eager oracle ("eager") for the
-    data-dependent workloads — the schedule-driven trio is device-
-    resident either way and ignores it.
+    the default), the per-cycle eager oracle ("eager"), or the fused
+    megakernel path ("megakernel") for the data-dependent workloads —
+    the schedule-driven trio is device-resident either way and ignores
+    it.
     """
     name: str
     title: str

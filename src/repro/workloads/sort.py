@@ -60,12 +60,17 @@ def extract_min(eng: APEngine, val: Field, active: Field,
 
 
 def ap_sort(x: np.ndarray, m: int = 8, backend: str = "jnp",
-            mode: str = "device") -> tuple[np.ndarray, dict]:
+            mode: str = "device", n_shards: int | None = None
+            ) -> tuple[np.ndarray, dict]:
     """Sort unsigned integers ``x`` (< 2^m) ascending on an n-PU AP.
 
     Returns (sorted array, engine counters).  Exact.
+    ``mode="megakernel"`` runs each extraction round as one fused
+    op-group launch plus a single bulk accounting fold (bit-identical
+    to both other modes); ``n_shards`` (megakernel only) shards the
+    bitplanes over that many devices.
     """
-    if mode not in ("device", "eager"):
+    if mode not in ("device", "eager", "megakernel"):
         raise ValueError(f"unknown mode {mode!r}")
     x = np.asarray(x, np.uint64)
     n = x.shape[0]
@@ -73,7 +78,9 @@ def ap_sort(x: np.ndarray, m: int = 8, backend: str = "jnp",
         raise ValueError(f"entries must fit in {m} bits")
 
     n_words = max(((n + 31) // 32) * 32, 32)
-    eng = APEngine(n_words=n_words, n_bits=plan_bits(m), backend=backend)
+    eng = APEngine(n_words=n_words, n_bits=plan_bits(m),
+                   backend=_device.engine_backend(backend, mode),
+                   n_shards=n_shards)
     val = eng.alloc.alloc(m, "val")
     active = eng.alloc.alloc(1, "active")
     cand = eng.alloc.alloc(1, "cand")
@@ -86,7 +93,13 @@ def ap_sort(x: np.ndarray, m: int = 8, backend: str = "jnp",
     eng.load(active, mask)
 
     out: list[int] = []
-    if mode == "device":
+    if mode == "megakernel":
+        rounds = min(n, 1 << m)
+        tr = _device.min_extract_rounds_mk(eng, val, active, cand, rounds,
+                                           remaining=n)
+        vals, cnts, _ = _device.replay_extract_bulk(eng, tr, m, budget=n)
+        out = np.repeat(vals, cnts)[:n].tolist()
+    elif mode == "device":
         # at most one extraction per distinct value; rounds past the
         # data-dependent end run as masked no-ops on device
         rounds = min(n, 1 << m)

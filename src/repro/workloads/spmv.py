@@ -34,15 +34,17 @@ def plan_bits(n_rows: int, m: int) -> int:
 
 def ap_spmv(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
             x: np.ndarray, n_rows: int, m: int = 8,
-            backend: str = "jnp", mode: str = "device"
-            ) -> tuple[np.ndarray, dict]:
+            backend: str = "jnp", mode: str = "device",
+            n_shards: int | None = None) -> tuple[np.ndarray, dict]:
     """y = A @ x for A in COO form (rows, cols, vals); entries < 2^m.
 
     Returns (y[n_rows], engine counters).  Exact (integer).
     ``mode="device"`` runs the whole per-(row, bit) tag-count reduction
-    as one compiled program; ``mode="eager"`` is the per-probe oracle.
+    as one compiled program; ``mode="eager"`` is the per-probe oracle;
+    ``mode="megakernel"`` fuses the probe batch into one op-group
+    launch with bulk accounting (``n_shards`` shards the lanes).
     """
-    if mode not in ("device", "eager"):
+    if mode not in ("device", "eager", "megakernel"):
         raise ValueError(f"unknown mode {mode!r}")
     rows = np.asarray(rows, np.uint64)
     cols = np.asarray(cols, np.uint64)
@@ -57,7 +59,8 @@ def ap_spmv(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
     r_w = max(1, int(np.ceil(np.log2(max(n_rows, 2)))))
     n_words = max(((nnz + 31) // 32) * 32, 32)
     eng = APEngine(n_words=n_words, n_bits=plan_bits(n_rows, m),
-                   backend=backend)
+                   backend=_device.engine_backend(backend, mode),
+                   n_shards=n_shards)
     row_f = eng.alloc.alloc(r_w, "row")
     a_f = eng.alloc.alloc(m, "a")
     x_f = eng.alloc.alloc(m, "x")
@@ -78,14 +81,16 @@ def ap_spmv(rows: np.ndarray, cols: np.ndarray, vals: np.ndarray,
 
     y = np.zeros(n_rows, np.int64)
     row_cols = row_f.cols()
-    if mode == "device":
+    if mode in ("device", "megakernel"):
         probe_cols = np.asarray([row_cols + [prod.col(b)]
                                  for i in range(n_rows)
                                  for b in range(2 * m)], np.int32)
         probe_keys = np.asarray([[(i >> rb) & 1 for rb in range(r_w)] + [1]
                                  for i in range(n_rows)
                                  for _ in range(2 * m)], np.uint32)
-        counts = _device.count_probes(eng, probe_cols, probe_keys)
+        probe = (_device.count_probes_mk if mode == "megakernel"
+                 else _device.count_probes)
+        counts = probe(eng, probe_cols, probe_keys)
         for i in range(n_rows):
             for b in range(2 * m):
                 y[i] += int(counts[i * 2 * m + b]) << b

@@ -222,3 +222,17 @@ def test_concat_empty_schedule_list_raises():
         PassSchedule.concat([])
     with pytest.raises(ValueError, match="empty pass schedule"):
         PassSchedule.build([])
+
+
+def test_bucket_empty_schedule_raises():
+    """bucket_schedule(P=0) used to fall through to _next_pow2 and
+    produce a nonsense 1-pass bucket; now it refuses up front with a
+    pointer at the PassSchedule.build contract."""
+    empty = PassSchedule(cmp_cols=np.zeros((0, 1), np.int32),
+                         cmp_key=np.zeros((0, 1), np.uint32),
+                         w_cols=np.zeros((0, 1), np.int32),
+                         w_key=np.zeros((0, 1), np.uint32),
+                         kc=np.zeros(0, np.int32),
+                         kw=np.zeros(0, np.int32))
+    with pytest.raises(ValueError, match="nothing to bucket"):
+        E.bucket_schedule(empty)

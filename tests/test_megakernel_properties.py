@@ -1,0 +1,358 @@
+"""Property-based differential harness for the AP megakernel.
+
+Random op groups (word widths 1-64, random element counts, mask
+patterns, conditional structure) and random PassSchedules are executed
+across every execution path the engine offers and pinned bit-identical:
+
+* an independent pure-numpy oracle (written here, sharing no code with
+  the executors) vs the fused-scan jnp reference;
+* the jnp reference vs the Pallas megakernel (interpret mode on CPU),
+  including multi-block lane tilings;
+* the eager engine vs ``backend="megakernel"`` /
+  ``"megakernel_pallas"`` at the :class:`~repro.core.engine.APEngine`
+  level — planes, tag, cycles, energy, events AND the trace arrays;
+* eager vs device vs megakernel full workloads (sort/knn/hist) through
+  the registry;
+* unsharded vs 1/2/4-device ``shard_map`` execution (subprocess, slow
+  lane — XLA host device count must be forced before jax initializes).
+
+Strategies draw only scalars (the vendored fallback shim in
+``tests/_fallback`` supports no ``composite``); arrays come from a
+``np.random.default_rng`` seeded by a drawn integer, so examples are
+reproducible from the hypothesis report alone.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import bitplane as bp
+from repro.core.engine import APEngine, PassSchedule
+from repro.kernels.ap_megakernel import (MAX_COND, OP_CMP, OP_CMP_TAG,
+                                         OP_PASS, OP_WRITE, OpGroup,
+                                         run_group)
+from repro.workloads import registry
+
+pytestmark = [pytest.mark.megakernel, pytest.mark.pallas]
+
+
+# ---------------------------------------------------------------------------
+# independent numpy oracle (shares no code with ref.group_scan)
+# ---------------------------------------------------------------------------
+
+def _np_group_oracle(bits, tag, group, enabled):
+    """Sequential bool-matrix executor for an op group.
+
+    bits: bool[n_bits, n_words]; tag: bool[n_words].  Returns
+    (bits', tag', matched int64[P], executed bool[P]).
+    """
+    op, cond, cc, ck, wc, wk = group.tables()
+    P = group.n_ops
+    bits, tag = bits.copy(), tag.copy()
+    matched = np.zeros(P, np.int64)
+    executed = np.zeros(P, bool)
+    hist = [0] * MAX_COND
+    for p in range(P):
+        t = np.ones(bits.shape[1], bool)
+        for c, k in zip(cc[p], ck[p]):
+            t &= bits[c] == bool(k)
+        if op[p] == OP_CMP_TAG:
+            t &= tag
+        wtag = tag if op[p] == OP_WRITE else t
+        m = int(wtag.sum())
+        prev = hist[MAX_COND - cond[p]] if cond[p] > 0 else 1
+        if bool(enabled[p]) and prev > 0:
+            if op[p] in (OP_PASS, OP_WRITE):
+                for c, k in zip(wc[p], wk[p]):
+                    bits[c][wtag] = bool(k)
+            if op[p] in (OP_CMP, OP_CMP_TAG):
+                tag = t
+            matched[p], executed[p] = m, True
+        hist = hist[1:] + [int(matched[p])]
+    return bits, tag, matched, executed
+
+
+def _random_group(rng, n_bits, P, conditional):
+    ops_ = []
+    for p in range(P):
+        opc = int(rng.choice([OP_PASS, OP_CMP, OP_CMP_TAG, OP_WRITE]))
+        cond = (int(rng.integers(0, min(p, MAX_COND) + 1))
+                if conditional else 0)
+        nc = int(rng.integers(1, min(n_bits, 3) + 1))
+        cc = rng.choice(n_bits, size=nc, replace=False)
+        nw = int(rng.integers(1, min(n_bits, 2) + 1))
+        wc = rng.choice(n_bits, size=nw, replace=False)
+        ops_.append((opc, cond, list(cc),
+                     list(rng.integers(0, 2, nc)),
+                     list(wc), list(rng.integers(0, 2, nw))))
+    return OpGroup.build(ops_)
+
+
+def _random_state(rng, n_bits, n_words):
+    """(planes uint32[n_bits, lanes], tag uint32[lanes], bool mirrors)."""
+    bits = rng.integers(0, 2, (n_bits, n_words)).astype(bool)
+    tag = rng.integers(0, 2, n_words).astype(bool)
+    planes = jnp.stack([bp.pack_bits(row) for row in bits])
+    return planes, bp.pack_bits(tag), bits, tag
+
+
+def _unpack(planes, tag, n_bits, n_words):
+    bits = np.stack([np.asarray(bp.unpack_bits(planes[i]), bool)[:n_words]
+                     for i in range(n_bits)])
+    return bits, np.asarray(bp.unpack_bits(tag), bool)[:n_words]
+
+
+# word widths 1-64, element counts over 1-3 packed lanes, shapes
+# bucketed so the jit cache stays bounded across examples
+_SEED = st.integers(0, 2 ** 31 - 1)
+_NBITS = st.sampled_from((1, 2, 7, 33, 64))
+_NWORDS = st.sampled_from((32, 64, 96))
+_P = st.integers(1, 8)
+
+
+@settings(max_examples=25)
+@given(seed=_SEED, n_bits=_NBITS, n_words=_NWORDS, P=_P,
+       conditional=st.booleans(), mask=st.booleans())
+def test_group_jnp_matches_numpy_oracle(seed, n_bits, n_words, P,
+                                        conditional, mask):
+    """Fused-scan executor == independent sequential numpy oracle."""
+    rng = np.random.default_rng(seed)
+    group = _random_group(rng, n_bits, P, conditional)
+    planes, tag, bits, tbits = _random_state(rng, n_bits, n_words)
+    enabled = rng.integers(0, 2, P).astype(bool) if mask \
+        else np.ones(P, bool)
+
+    b_ref, t_ref, m_ref, _ = _np_group_oracle(bits, tbits, group, enabled)
+    planes2, tag2, matched = run_group(planes, tag, group, enabled)
+    b_got, t_got = _unpack(planes2, tag2, n_bits, n_words)
+    np.testing.assert_array_equal(b_got, b_ref)
+    np.testing.assert_array_equal(t_got, t_ref)
+    np.testing.assert_array_equal(np.asarray(matched, np.int64), m_ref)
+
+
+@settings(max_examples=25)
+@given(seed=_SEED, n_bits=_NBITS, n_words=_NWORDS, P=_P,
+       conditional=st.booleans(), block=st.sampled_from((32, 512)))
+def test_group_pallas_matches_jnp(seed, n_bits, n_words, P, conditional,
+                                  block):
+    """Pallas megakernel (interpret mode, incl. multi-block lane
+    tilings) == jnp reference, bitwise."""
+    rng = np.random.default_rng(seed)
+    group = _random_group(rng, n_bits, P, conditional)
+    planes, tag, _, _ = _random_state(rng, n_bits, n_words)
+    enabled = rng.integers(0, 2, P).astype(bool)
+
+    p_ref, t_ref, m_ref = run_group(planes, tag, group, enabled)
+    p_pal, t_pal, m_pal = run_group(planes, tag, group, enabled,
+                                    backend="pallas", block_lanes=block)
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_pal))
+    np.testing.assert_array_equal(np.asarray(t_ref), np.asarray(t_pal))
+    np.testing.assert_array_equal(np.asarray(m_ref), np.asarray(m_pal))
+
+
+# ---------------------------------------------------------------------------
+# engine-level differential: eager vs megakernel vs megakernel_pallas
+# ---------------------------------------------------------------------------
+
+def _random_schedule(rng, n_bits, n_passes):
+    passes = []
+    for _ in range(n_passes):
+        nc = int(rng.integers(1, min(n_bits, 3) + 1))
+        cc = rng.choice(n_bits, size=nc, replace=False)
+        nw = int(rng.integers(1, min(n_bits, 2) + 1))
+        wc = rng.choice(n_bits, size=nw, replace=False)
+        passes.append((list(cc), list(rng.integers(0, 2, nc)),
+                       list(wc), list(rng.integers(0, 2, nw))))
+    return PassSchedule.build(passes)
+
+
+def assert_counters_identical(a: dict, b: dict):
+    assert set(a) == set(b)
+    for k in sorted(a):
+        va, vb = a[k], b[k]
+        if isinstance(va, np.ndarray):
+            assert va.dtype == vb.dtype, k
+            np.testing.assert_array_equal(va, vb, err_msg=k)
+        else:
+            assert va == vb, (k, va, vb)
+
+
+@settings(max_examples=10)
+@given(seed=_SEED, n_bits=st.sampled_from((2, 7, 16)),
+       n_words=_NWORDS, n_sched=st.integers(1, 3))
+def test_engine_run_backends_bit_identical(seed, n_bits, n_words, n_sched):
+    """APEngine.run on random schedules: eager jnp vs megakernel vs
+    megakernel_pallas give identical planes, tag, counters AND trace."""
+    rng = np.random.default_rng(seed)
+    scheds = [_random_schedule(rng, n_bits, int(rng.integers(1, 6)))
+              for _ in range(n_sched)]
+    vals = rng.integers(0, 1 << n_bits, n_words, dtype=np.uint64)
+
+    engines = []
+    for be in ("jnp", "megakernel", "megakernel_pallas"):
+        eng = APEngine(n_words=n_words, n_bits=n_bits, backend=be)
+        f = eng.alloc.alloc(n_bits, "v")
+        eng.load(f, vals)
+        for sched in scheds:
+            eng.run(sched)
+        eng.compare([f.col(0)], [1])        # shared non-run op path
+        engines.append(eng)
+
+    ref = engines[0]
+    for eng in engines[1:]:
+        np.testing.assert_array_equal(np.asarray(ref.planes),
+                                      np.asarray(eng.planes))
+        np.testing.assert_array_equal(np.asarray(ref.tag),
+                                      np.asarray(eng.tag))
+        a, b = ref.counters(), eng.counters()
+        a["trace_cycles"], a["trace_energy"] = ref.trace_events()
+        b["trace_cycles"], b["trace_energy"] = eng.trace_events()
+        assert_counters_identical(a, b)
+
+
+# ---------------------------------------------------------------------------
+# workload-level differential through the registry
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8)
+@given(name=st.sampled_from(("sort", "knn", "hist", "spmv")),
+       n=st.sampled_from((33, 48, 64)))
+def test_workload_modes_bit_identical(name, n):
+    """eager == device == megakernel for full workload runs: values,
+    cycles, energy, event counters and both trace arrays."""
+    ce = registry.trace_counters(name, n, mode="eager")
+    cd = registry.trace_counters(name, n, mode="device")
+    cm = registry.trace_counters(name, n, mode="megakernel")
+    assert_counters_identical(ce, cd)
+    assert_counters_identical(ce, cm)
+
+
+def test_engine_rejects_bad_shard_config():
+    with pytest.raises(ValueError, match="megakernel"):
+        APEngine(n_words=64, n_bits=4, backend="jnp", n_shards=2)
+    with pytest.raises(ValueError, match="divisible"):
+        APEngine(n_words=32, n_bits=4, backend="megakernel", n_shards=3)
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode Pallas coverage: all three kernel families in tier-1
+# ---------------------------------------------------------------------------
+
+def test_interpret_mode_kernel_coverage():
+    """ap_megakernel + ap_match + mg_smooth all execute under
+    ``pl.pallas_call(..., interpret=True)`` and match their oracles —
+    the tier-1 suite exercises every Pallas kernel family on CPU."""
+    rng = np.random.default_rng(0)
+
+    group = _random_group(rng, 8, 6, conditional=True)
+    planes, tag, _, _ = _random_state(rng, 8, 64)
+    ref = run_group(planes, tag, group)
+    pal = run_group(planes, tag, group, backend="pallas", interpret=True)
+    for a, b in zip(ref, pal):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    from repro.kernels.ap_match import ops as match_ops
+    sched = _random_schedule(rng, 8, 5)
+    p_ref, m_ref = match_ops.run_schedule(
+        planes, sched.cmp_cols, sched.cmp_key, sched.w_cols, sched.w_key,
+        backend="jnp")
+    p_pal, m_pal = match_ops.run_schedule(
+        planes, sched.cmp_cols, sched.cmp_key, sched.w_cols, sched.w_key,
+        backend="pallas", interpret=True)
+    np.testing.assert_array_equal(np.asarray(p_ref), np.asarray(p_pal))
+    np.testing.assert_array_equal(np.asarray(m_ref), np.asarray(m_pal))
+
+    from repro.core import multigrid as mg
+    from repro.core import thermal
+    from repro.kernels.mg_smooth import ops as mg_ops
+    from repro.stack.spec import dram_on_logic
+    grid = thermal.Grid(die_w=5e-3, ny=16, nx=16, margin=4,
+                        spec=dram_on_logic(1))
+    F = grid.fields()
+    shape = F["g_pkg"].shape
+    T = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=shape).astype(np.float32))
+    ref_T = mg.rb_line_sweep(T, b, F, 0.5, 0)
+    pal_T = mg_ops.rb_line_sweep(T, b, F, 0.5, 0, interpret=True)
+    np.testing.assert_allclose(np.asarray(pal_T), np.asarray(ref_T),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# shard invariance: 1/2/4 forced host devices in a subprocess
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS = r"""
+import jax, numpy as np
+assert len(jax.devices()) == 4, jax.devices()
+import jax.numpy as jnp
+from repro.core import bitplane as bp
+from repro.parallel.sharding import ap_mesh
+from repro.kernels.ap_megakernel import run_group, OpGroup
+from repro.workloads import sort, histogram
+from test_megakernel_properties import (_np_group_oracle, _random_group,
+                                        _random_state, _unpack,
+                                        assert_counters_identical)
+
+rng = np.random.default_rng(123)
+# raw op groups: every shard count == the numpy oracle, bitwise
+for trial in range(6):
+    n_bits = int(rng.choice([1, 7, 33]))
+    n_words = 128                      # 4 lanes: divisible by 1/2/4
+    group = _random_group(rng, n_bits, int(rng.integers(1, 8)),
+                          conditional=bool(trial % 2))
+    planes, tag, bits, tbits = _random_state(rng, n_bits, n_words)
+    enabled = rng.integers(0, 2, group.n_ops).astype(bool)
+    b_ref, t_ref, m_ref, _ = _np_group_oracle(bits, tbits, group, enabled)
+    for ns in (None, 1, 2, 4):
+        mesh = None if ns is None else ap_mesh(ns)
+        p2, t2, m2 = run_group(planes, tag, group, enabled, mesh=mesh)
+        b_got, t_got = _unpack(p2, t2, n_bits, n_words)
+        np.testing.assert_array_equal(b_got, b_ref, err_msg=f"ns={ns}")
+        np.testing.assert_array_equal(t_got, t_ref, err_msg=f"ns={ns}")
+        np.testing.assert_array_equal(np.asarray(m2, np.int64), m_ref,
+                                      err_msg=f"ns={ns}")
+
+# full workloads: counters + traces invariant to the shard count
+x = rng.integers(0, 256, 128, dtype=np.uint64)
+runs = {ns: sort.ap_sort(x, m=8, mode="megakernel", n_shards=ns)
+        for ns in (None, 1, 2, 4)}
+for ns in (1, 2, 4):
+    np.testing.assert_array_equal(runs[None][0], runs[ns][0])
+    assert_counters_identical(runs[None][1], runs[ns][1])
+h = rng.integers(0, 64, 100, dtype=np.uint64)
+hr = {ns: histogram.ap_histogram(h, 8, m=6, mode="megakernel",
+                                 n_shards=ns) for ns in (None, 2, 4)}
+for ns in (2, 4):
+    np.testing.assert_array_equal(hr[None][0], hr[ns][0])
+    assert_counters_identical(hr[None][1], hr[ns][1])
+print("MEGAKERNEL-SHARD-INVARIANCE-OK")
+"""
+
+
+@pytest.mark.slow
+def test_shard_invariance_subprocess():
+    """Unsharded vs 1/2/4-device shard_map: op groups match the numpy
+    oracle and full workload counters/traces are bitwise invariant."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    # tests/ for this module's helpers; _fallback so the subprocess can
+    # import hypothesis even where the real package is absent (conftest
+    # does this for the in-process suite)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), os.path.join(root, "tests"),
+         os.path.join(root, "tests", "_fallback"),
+         env.get("PYTHONPATH", "")])
+    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS],
+                          capture_output=True, text=True, env=env,
+                          cwd=root, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MEGAKERNEL-SHARD-INVARIANCE-OK" in proc.stdout

@@ -23,6 +23,8 @@ def test_spec_validation():
         SweepSpec(workloads=("dmm",), sizes=(128,))
     with pytest.raises(ValueError):
         SweepSpec(workloads=("dmm",), machines=("gpu",))
+    with pytest.raises(ValueError):
+        SweepSpec(workloads=("dmm",), ap_backend="bogus")
 
 
 def test_spec_hash_sensitivity():
@@ -34,7 +36,7 @@ def test_spec_hash_sensitivity():
         workloads=("hist", "sort"), sizes=(8192,), n_dram=(2,),
         fb_modes=("closed",), machines=("ap",), grid_n=12, n_intervals=8,
         t_end=0.5, steps_per_interval=2, n_cg=16, theta=0.5, n_picard=8,
-        solver="mg", n_mg=5)
+        solver="mg", n_mg=5, ap_backend="megakernel")
     for field, value in perturbations.items():
         other = dataclasses.replace(spec, **{field: value})
         assert other.content_hash() != spec.content_hash(), field
