@@ -10,9 +10,10 @@ test:
 bench:
 	$(PY) -m benchmarks.run
 
-# the CI smoke lane: thermal (incl. 256^2 solver shoot-out), stack, sweep
+# the CI smoke lane: thermal (incl. 256^2 solver shoot-out), stack,
+# sweep, and the DTM/DVFS policy Pareto shoot-out
 bench-quick:
-	$(PY) -m benchmarks.run --quick thermal stack sweep
+	$(PY) -m benchmarks.run --quick thermal stack sweep policy
 
 # refresh the committed perf baseline from a local quick run
 # (tolerances in benchmarks/baseline.json are preserved; only the

@@ -1,0 +1,159 @@
+"""DTM/DVFS policy shoot-out: Pareto frontiers over the policy axis.
+
+Runs the full `repro.policy` controller family over a small scenario
+grid (workloads × machines, closed-loop feedback) and scores every
+(scenario, policy) cell on the three axes a thermal-management story
+actually trades: **performance** (the DTM slowdown ``mean(1/f)``),
+**peak DRAM temperature**, and **energy to solution**
+(``StackReport.energy_per_work_J``).  Per scenario it prints the policy
+table with its Pareto-optimal rows starred (`repro.policy.pareto`,
+minimizing all three axes) and the 85 °C DRAM verdict per row.
+
+The headline metric is ``n_rescued``: scenarios whose verdict FLIPS —
+BLOCKED under the default logic-sensed ramp, OK under some other
+controller.  The quick grid contains exactly such a point by
+construction: ``sort/2^20/dram2`` on the AP runs its DRAM dies to
+~95 °C while the logic dies idle at ~87 °C, so every logic-sensed
+policy (ramp/step/hysteresis/pid/predictive) is *blind* and never
+trips, but the DRAM-sensed per-die controller holds the stack under
+the ceiling at a ~5 % slowdown.  ``tools/check_bench.py`` gates
+``n_rescued >= 1`` plus the numbers behind that story
+(``benchmarks/baseline.json``, section "policy").
+
+``--quick`` is the CI smoke lane (same grid today; the flag keys the
+lane split), ``--no-cache`` forces a live replay.  DVFS
+operating-point residency counters (``policy/dvfs-22nm/residency/*``)
+are printed from the obs registry after a live run.  Metrics land in
+``BENCH_policy.json``.
+"""
+import argparse
+import sys
+import time
+
+try:                                    # python -m benchmarks.run ...
+    from benchmarks._record import Recorder
+except ImportError:                     # python benchmarks/bench_*.py
+    from _record import Recorder
+
+from repro import obs
+from repro import policy as policy_registry
+from repro.policy.pareto import pareto_front
+from repro.sweep import SweepSpec, run_sweep
+
+
+def quick_spec() -> SweepSpec:
+    """The CI lane: 2 workloads × 2 machines × every registered policy.
+
+    ``sort`` at 2^20 is the verdict-flip scenario (see module
+    docstring); ``dmm`` at 2^20 drives the SIMD hot enough that the
+    controllers differentiate into a real Pareto frontier (slowdown
+    2–5×, distinct peak/energy trade-offs)."""
+    return SweepSpec(workloads=("sort", "dmm"), sizes=(2 ** 20,),
+                     n_dram=(2,), fb_modes=("closed",),
+                     policies=policy_registry.names(),
+                     grid_n=8, n_intervals=16, steps_per_interval=1,
+                     n_cg=25)
+
+
+def full_spec() -> SweepSpec:
+    return SweepSpec(workloads=("sort", "dmm", "hist"),
+                     sizes=(2 ** 14, 2 ** 20), n_dram=(1, 2),
+                     fb_modes=("closed",),
+                     policies=policy_registry.names(),
+                     grid_n=12, n_intervals=16, steps_per_interval=1,
+                     n_cg=30, n_picard=20)
+
+
+def score(rec) -> tuple[float, float, float]:
+    """(slowdown, peak dram °C, energy-per-work J) — minimize all."""
+    rep = rec.report
+    return (rep.dtm_slowdown, float(rep.dram_peak_C.max()),
+            rep.energy_per_work_J)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke lane grid")
+    ap.add_argument("--no-cache", action="store_true")
+    args = ap.parse_args(argv)
+
+    spec = quick_spec() if args.quick else full_spec()
+    rec = Recorder("policy")
+
+    t0 = time.time()
+    res = run_sweep(spec, use_cache=not args.no_cache)
+    dt = time.time() - t0
+    print(f"policy sweep: {spec.n_points} points x {len(spec.machines)} "
+          f"machines ({len(spec.policies)} policies: "
+          f"{', '.join(spec.policies)}) in {dt:.1f}s"
+          f"{' [cache HIT]' if res.from_cache else ''}")
+    for r in res.records:
+        assert r.report.converged, (r.label, r.report.residual_C.max())
+    rec.add(sweep_wall_s=dt, n_cases=len(res.records))
+
+    # ---- group the records into scenarios: one policy table each ----
+    scenarios: dict[tuple, dict[str, object]] = {}
+    for r in res.records:
+        key = (r.point.workload, r.point.size, r.point.n_dram, r.machine)
+        scenarios.setdefault(key, {})[r.point.policy] = r
+
+    n_rescued = n_regressed = 0
+    rescued_labels = []
+    min_pareto = len(spec.policies)
+    for (wl, size, n_dram, mc), by_pol in scenarios.items():
+        pols = [p for p in spec.policies if p in by_pol]
+        pts = [score(by_pol[p]) for p in pols]
+        front = set(pareto_front(pts))
+        min_pareto = min(min_pareto, len(front))
+        print(f"\n== {wl}/N{size}/dram{n_dram} :: {mc} ==")
+        print(f"  {'policy':<12}{'slow_x':>8}{'dram_C':>8}"
+              f"{'E/work_J':>10}  verdict")
+        for i, p in enumerate(pols):
+            slow, peak, epw = pts[i]
+            ok = by_pol[p].verdict_ok
+            star = " *" if i in front else ""
+            print(f"  {p:<12}{slow:>8.3f}{peak:>8.1f}{epw:>10.3g}  "
+                  f"{'OK' if ok else 'BLOCKED'}{star}")
+        ramp_ok = by_pol["ramp"].verdict_ok
+        saviors = [p for p in pols
+                   if p != "ramp" and by_pol[p].verdict_ok]
+        if not ramp_ok and saviors:
+            n_rescued += 1
+            rescued_labels.append(f"{wl}/N{size}/dram{n_dram}/{mc}")
+            print(f"  RESCUED: ramp BLOCKED -> OK under "
+                  f"{', '.join(saviors)}")
+        if ramp_ok and any(not by_pol[p].verdict_ok for p in pols):
+            n_regressed += 1
+
+    print(f"\n# {n_rescued} scenario(s) rescued by a non-default policy"
+          f"{': ' + '; '.join(rescued_labels) if rescued_labels else ''}")
+    print(f"# {n_regressed} scenario(s) regressed vs ramp; smallest "
+          f"Pareto front has {min_pareto} member(s)")
+    rec.add(n_scenarios=len(scenarios), n_rescued=n_rescued,
+            n_regressed=n_regressed, min_pareto=min_pareto)
+
+    # ---- the gated numbers behind the rescue story (quick grid) ----
+    for key, by_pol in scenarios.items():
+        wl, size, n_dram, mc = key
+        if (wl, mc) != ("sort", "ap"):
+            continue
+        for pol in ("ramp", "perdie"):
+            if pol in by_pol:
+                slow, peak, _ = score(by_pol[pol])
+                rec.add(**{f"sort_ap_{pol}_dram_peak_C": peak,
+                           f"sort_ap_{pol}_slowdown_x": slow})
+
+    # DVFS residency: which operating points the governor actually sat
+    # in (counters land under policy/<name>/residency/<op> during the
+    # replay — absent on a cache hit, which never runs the controller)
+    resid = obs.values_by_prefix("policy/")
+    if resid:
+        print("# policy residency (intervals):")
+        for name, n in resid.items():
+            print(f"#   {name} = {n}")
+    return rec.finish()
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -13,9 +13,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_ap_backend, bench_cycles, bench_roofline,
-                        bench_serving, bench_speedup_power, bench_stack,
-                        bench_sweep, bench_thermal, bench_workloads)
+from benchmarks import (bench_ap_backend, bench_cycles, bench_policy,
+                        bench_roofline, bench_serving, bench_speedup_power,
+                        bench_stack, bench_sweep, bench_thermal,
+                        bench_workloads)
 
 SECTIONS = {
     "cycles": ("§2.2 cycle-count claims", bench_cycles.main),
@@ -30,6 +31,8 @@ SECTIONS = {
               bench_stack.main),
     "sweep": ("scenario sweep: workloads x sizes x stacks through the "
               "cached vmapped path", bench_sweep.main),
+    "policy": ("DTM/DVFS policy shoot-out: Pareto frontiers + verdict "
+               "flips over the policy axis", bench_policy.main),
     "serving": ("LLM-serving traffic -> thermal co-simulation "
                 "(SLA + coarsening headline)", bench_serving.main),
     "roofline": ("§Roofline per-cell terms (dry-run artifacts)",

@@ -305,6 +305,39 @@ def dc_peak_rise_C(frame, F: dict) -> float:
     return float(jnp.max(dT))
 
 
+def interval_forecaster(A, solve, logic_mask3, t_amb):
+    """One-substep RC forecast of the logic hot spot, affine in the duty.
+
+    Built per interval inside the replay scan and handed to predictive
+    DTM policies as ``PolicyContext.predict_hot``
+    (``repro.policy.PredictivePolicy``): the returned
+    ``predict(dT, P_dyn, P_stat)`` closes over the interval's implicit
+    step operator and yields ``hot(cands)`` — for duty candidates
+    ``cands [K]``, the forecast end-of-substep logic hot spots [K] under
+    power ``f·P_dyn + P_stat``.  The theta-step response is affine in
+    ``f``, so ALL candidates cost two inner solves:
+
+        dT(f) = dT + solve(P_stat − A dT) + f · solve(P_dyn)
+
+    ``solve`` is the interval's implicit-LHS inner solve (the same
+    fixed-cost PCG/multigrid object the replay steps with), so the
+    forecast horizon equals one replay substep and the forecast model IS
+    the replay's own thermal RC operator — no second model to calibrate.
+    """
+    def predict(dT, P_dyn, P_stat):
+        def hot(cands):
+            # solves run lazily, on first call: a replay whose policy
+            # never forecasts traces no forecast ops at all
+            base = dT + solve(P_stat - A(dT))
+            gain = solve(P_dyn)
+            fields = base[None] + cands[:, None, None, None] * gain
+            return jnp.max(
+                jnp.where(logic_mask3 > 0, fields + t_amb, -jnp.inf),
+                axis=(1, 2, 3))
+        return hot
+    return predict
+
+
 # ---------------------------------------------------------------------------
 # implicit replay core (scan over frames; vmappable over design points)
 # ---------------------------------------------------------------------------

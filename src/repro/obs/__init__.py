@@ -44,7 +44,8 @@ from repro.obs.trace import Tracer
 
 __all__ = [
     "enable", "disable", "is_enabled", "scoped", "reset",
-    "count", "value", "gauge", "observe", "observe_many",
+    "count", "value", "values_by_prefix", "gauge", "observe",
+    "observe_many",
     "span", "snapshot", "trace_events", "write_trace",
 ]
 
@@ -106,6 +107,14 @@ def value(name: str) -> int:
     """Current value of a counter (0 if it never fired)."""
     c = _registry.counters.get(name)
     return 0 if c is None else c.value
+
+
+def values_by_prefix(prefix: str) -> dict[str, int]:
+    """All counters under a name prefix, e.g. ``policy/dvfs-22nm/`` —
+    how the policy bench collects per-operating-point residency without
+    knowing a table's labels up front (docs/observability.md)."""
+    return {name: c.value for name, c in sorted(_registry.counters.items())
+            if name.startswith(prefix)}
 
 
 def gauge(name: str, v: float) -> None:

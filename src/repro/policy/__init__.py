@@ -1,0 +1,60 @@
+"""``repro.policy`` — the DVFS/DTM policy engine.
+
+A *policy* is a sampled dynamic-thermal-management controller behind the
+common :class:`~repro.policy.base.Policy` protocol: it reads measured
+start-of-interval hot spots and sets the next interval's power and
+performance duty.  The closed-loop replay (``repro.stack.feedback``)
+threads the policy state through its ``lax.scan`` jit-compatibly, and
+``SweepSpec.policies`` sweeps the registered names below as a
+first-class scenario axis.  ``benchmarks/bench_policy.py`` scores the
+family on performance × peak-temperature × energy Pareto frontiers
+(helpers in :mod:`repro.policy.pareto`); docs/policies.md is the
+doctested tour.
+"""
+from typing import Callable
+
+from repro.policy.base import Policy, PolicyContext, masked_hot, ramp_duty
+from repro.policy.controllers import (DVFSPolicy, HysteresisPolicy,
+                                      PerDiePolicy, PIDPolicy,
+                                      PredictivePolicy, RampPolicy)
+from repro.policy.dvfs import (DVFSTable, OperatingPoint,
+                               build_dvfs_table, nodes)
+from repro.policy.pareto import dominates, pareto_front
+
+#: name -> zero-argument factory for the sweepable policy family; the
+#: names are SweepSpec.policies values and the `policy/<name>/*`
+#: telemetry prefixes (docs/observability.md)
+POLICIES: dict[str, Callable[[], Policy]] = {
+    "ramp": RampPolicy,
+    "step": lambda: RampPolicy(ramp_C=0.0),
+    "hysteresis": HysteresisPolicy,
+    "pid": PIDPolicy,
+    "perdie": PerDiePolicy,
+    "dvfs": DVFSPolicy,
+    "predictive": PredictivePolicy,
+}
+
+
+def names() -> tuple[str, ...]:
+    """Registered policy names, registration order."""
+    return tuple(POLICIES)
+
+
+def get(name: str) -> Policy:
+    """Instantiate a registered policy by name (fresh instance)."""
+    try:
+        factory = POLICIES[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; expected one of "
+                         f"{names()}") from None
+    return factory()
+
+
+__all__ = [
+    "Policy", "PolicyContext", "masked_hot", "ramp_duty",
+    "RampPolicy", "HysteresisPolicy", "PIDPolicy", "PerDiePolicy",
+    "DVFSPolicy", "PredictivePolicy",
+    "DVFSTable", "OperatingPoint", "build_dvfs_table", "nodes",
+    "dominates", "pareto_front",
+    "POLICIES", "names", "get",
+]

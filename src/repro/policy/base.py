@@ -1,0 +1,114 @@
+"""The DVFS/DTM policy protocol and shared controller math.
+
+A *policy* is the sampled controller that turns measured start-of-interval
+temperatures into a power/performance operating point for the next
+interval of the closed-loop replay (``repro.stack.feedback``).  Policies
+are **frozen dataclasses** (hashable, so a
+:class:`~repro.stack.feedback.FeedbackParams` carrying one stays a valid
+jit static argument) whose :meth:`Policy.act` is traced into the replay's
+``lax.scan`` body — the method must therefore be pure jax: no Python
+branching on traced values, fixed-shape state, no host syncs.
+
+Contract (one call per trace interval, per design point):
+
+``init_state()``
+    The controller's carry pytree (fixed-shape jnp leaves; ``()`` for
+    stateless controllers).  It threads through the scan carry and vmaps
+    over the case batch, so every design point owns an independent
+    controller state.
+
+``act(state, ctx) -> (state', f_power, f_perf)``
+    ``ctx`` is a :class:`PolicyContext` of *measured* (start-of-interval)
+    quantities.  ``f_power`` scales the interval's dynamic power — a
+    scalar (all layers together, the classic throttle) or an ``[L]``
+    vector (per-die control for heterogeneous stacks).  ``f_perf`` is the
+    scalar performance duty in ``(0, 1]`` the runtime-slowdown accounting
+    uses (``mean(1/f_perf)``); for duty-cycling throttles the two
+    coincide, for DVFS they split (power falls with ``f·V²``, performance
+    only with ``f``).
+
+Actuating on the measured sample — never the unknown end-of-interval
+state — is what keeps the controller OUT of the replay's Picard fixed
+point; see the ``stack/feedback.py`` module docstring for why iterating
+a gain ≳ 1 bang-bang actuator there limit-cycles.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PolicyContext(NamedTuple):
+    """Measured inputs handed to :meth:`Policy.act` each interval.
+
+    ``layer_T`` [L]: per-layer hot-spot temperature (°C) at the interval
+    start; ``logic_mask``/``dram_mask`` [L]: 1.0 on layers of that kind;
+    ``predict_hot``: duty candidates [K] → forecast logic hot spots [K]
+    at the end of one replay substep under each candidate (the thermal
+    RC one-step forecaster, ``cosim.interval_forecaster``).
+    """
+    layer_T: jax.Array
+    logic_mask: jax.Array
+    dram_mask: jax.Array
+    predict_hot: Callable[[jax.Array], jax.Array]
+
+
+def masked_hot(layer_T: jax.Array, mask: jax.Array) -> jax.Array:
+    """Hot spot over the masked layers (−inf when the mask is empty)."""
+    return jnp.max(jnp.where(mask > 0, layer_T, -jnp.inf))
+
+
+def ramp_duty(t_C, trip_C: float, ramp_C: float, floor: float):
+    """The linear throttle law: duty 1 below ``trip_C``, ramping to
+    ``floor`` over ``ramp_C`` degrees.  ``ramp_C == 0`` is a legal step
+    trip (duty drops straight to the floor above ``trip_C``) — the
+    guarded form of the historical ``1 - (t - trip)/ramp`` expression,
+    which divided by the ramp width."""
+    if ramp_C == 0.0:
+        return jnp.where(t_C > trip_C, jnp.float32(floor),
+                         jnp.float32(1.0))
+    return jnp.clip(1.0 - (t_C - trip_C) / ramp_C, floor, 1.0)
+
+
+def check_trip(trip_C: float, name: str = "trip_C") -> None:
+    """Trip temperatures must be real or +inf (= never trips)."""
+    if math.isnan(trip_C) or trip_C == -math.inf:
+        raise ValueError(f"{name} must be a real temperature or math.inf "
+                         f"(never trips); got {trip_C!r}")
+
+
+def check_floor(floor: float, name: str = "floor") -> None:
+    """Duty floors must sit in (0, 1] — 0 would make the slowdown
+    accounting ``mean(1/f)`` divide by zero, above 1 is not a floor."""
+    if not (0.0 < floor <= 1.0):
+        raise ValueError(f"{name} must lie in (0, 1]; got {floor!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Base class: a no-op controller (always full power).
+
+    Subclasses override :meth:`act` (and :meth:`init_state` when they
+    carry state).  The base class doubles as the explicit "no DTM"
+    policy.
+    """
+
+    @property
+    def name(self) -> str:
+        return type(self).__name__.removesuffix("Policy").lower()
+
+    def init_state(self):
+        return ()
+
+    def act(self, state, ctx: PolicyContext):
+        one = jnp.float32(1.0)
+        return state, one, one
+
+    def residency(self, duty) -> dict[str, float] | None:
+        """Optional post-hoc residency attribution for a recorded duty
+        trace (``None`` = no discrete operating points to attribute)."""
+        return None

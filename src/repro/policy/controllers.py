@@ -1,0 +1,240 @@
+"""The policy family: sampled DTM/DVFS controllers for the closed loop.
+
+Every controller here implements the :class:`~repro.policy.base.Policy`
+protocol and is registered by name in ``repro.policy`` — that name is
+what :class:`~repro.sweep.spec.SweepSpec` sweeps over.  All of them
+actuate on the *measured* start-of-interval hot spots (see ``base.py``
+for the protocol and why that sampling discipline is load-bearing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.policy.base import (Policy, PolicyContext, check_floor,
+                               check_trip, masked_hot, ramp_duty)
+from repro.policy.dvfs import DVFSTable, build_dvfs_table
+
+
+@dataclasses.dataclass(frozen=True)
+class RampPolicy(Policy):
+    """The classic linear throttle: duty ramps from 1 at ``trip_C`` down
+    to ``floor`` over ``ramp_C`` degrees, sensed on the logic hot spot.
+
+    This is the pre-policy-engine DTM controller verbatim — a default
+    :class:`~repro.stack.feedback.FeedbackParams` resolves to it, and
+    the replay trajectories are pinned bit-identical to the historical
+    sampled ramp (``tests/test_policy.py``).  ``ramp_C = 0`` is a step
+    trip (legal; see :func:`~repro.policy.base.ramp_duty`).
+    """
+    trip_C: float = 95.0
+    ramp_C: float = 10.0
+    floor: float = 0.25
+
+    def __post_init__(self):
+        check_trip(self.trip_C)
+        check_floor(self.floor)
+        if self.ramp_C < 0:
+            raise ValueError(f"ramp_C must be >= 0; got {self.ramp_C!r}")
+
+    def act(self, state, ctx: PolicyContext):
+        t = masked_hot(ctx.layer_T, ctx.logic_mask)
+        f = ramp_duty(t, self.trip_C, self.ramp_C, self.floor)
+        return state, f, f
+
+
+@dataclasses.dataclass(frozen=True)
+class HysteresisPolicy(Policy):
+    """Bang-bang throttle with a release band.
+
+    Trips to ``floor`` when the logic hot spot exceeds ``trip_C`` and
+    releases back to full duty only once it has cooled below
+    ``trip_C - band_C`` — inside the band the controller HOLDS its
+    previous decision, so the duty cannot chatter while the temperature
+    dwells between the two thresholds (one decision per interval, and a
+    decision flips only on a genuine threshold crossing).
+    """
+    trip_C: float = 95.0
+    band_C: float = 5.0
+    floor: float = 0.25
+
+    def __post_init__(self):
+        check_trip(self.trip_C)
+        check_floor(self.floor)
+        if self.band_C < 0:
+            raise ValueError(f"band_C must be >= 0; got {self.band_C!r}")
+
+    def init_state(self):
+        return jnp.float32(0.0)          # 1.0 while throttled
+
+    def act(self, state, ctx: PolicyContext):
+        t = masked_hot(ctx.layer_T, ctx.logic_mask)
+        on = jnp.where(t > self.trip_C, jnp.float32(1.0),
+                       jnp.where(t < self.trip_C - self.band_C,
+                                 jnp.float32(0.0), state))
+        f = jnp.where(on > 0, jnp.float32(self.floor), jnp.float32(1.0))
+        return on, f, f
+
+
+@dataclasses.dataclass(frozen=True)
+class PIDPolicy(Policy):
+    """PID regulation of the logic hot spot onto ``target_C``.
+
+    Duty = ``clip(1 - (kp·e + ki·∫e + kd·Δe), floor, 1)`` with
+    ``e = T_hot - target_C``.  The integral is clamped to
+    ``[0, (1 - floor)/ki]`` (anti-windup: it can neither push the duty
+    past the floor nor bank negative error while cool).
+    """
+    target_C: float = 90.0
+    kp: float = 0.10
+    ki: float = 0.02
+    kd: float = 0.05
+    floor: float = 0.25
+
+    def __post_init__(self):
+        check_trip(self.target_C, "target_C")
+        check_floor(self.floor)
+        if min(self.kp, self.ki, self.kd) < 0:
+            raise ValueError("PID gains must be >= 0")
+
+    def init_state(self):
+        return (jnp.float32(0.0), jnp.float32(0.0))   # (∫e, prev e)
+
+    def act(self, state, ctx: PolicyContext):
+        integ, prev = state
+        err = masked_hot(ctx.layer_T, ctx.logic_mask) - self.target_C
+        err = jnp.maximum(err, jnp.float32(-1e6))     # -inf-safe (no logic)
+        i_max = (1.0 - self.floor) / self.ki if self.ki > 0 else 0.0
+        integ = jnp.clip(integ + err, 0.0, i_max)
+        u = self.kp * err + self.ki * integ + self.kd * (err - prev)
+        f = jnp.clip(1.0 - u, self.floor, 1.0)
+        return (integ, err), f, f
+
+
+@dataclasses.dataclass(frozen=True)
+class PerDiePolicy(Policy):
+    """Independent per-die throttling for heterogeneous stacks.
+
+    Each die kind runs its own ramp controller off its own hot-spot
+    sensor: DRAM dies throttle their activate/IO power on the DRAM
+    sensor (tripping at the retention-critical ``dram_trip_C``), logic
+    dies throttle on their own sensor AND honor the DRAM ceiling — a
+    compute die must back off when the memory stacked on it overheats,
+    because most of the DRAM's heat arrives from below.  ``f_power`` is
+    therefore a per-layer vector; the performance duty is the logic
+    dies' (compute sets the runtime).  Layers that are neither (the
+    spreader) stay at full power.
+    """
+    logic_trip_C: float = 95.0
+    logic_ramp_C: float = 10.0
+    dram_trip_C: float = 83.0
+    dram_ramp_C: float = 3.0
+    floor: float = 0.10
+
+    def __post_init__(self):
+        check_trip(self.logic_trip_C, "logic_trip_C")
+        check_trip(self.dram_trip_C, "dram_trip_C")
+        check_floor(self.floor)
+        if min(self.logic_ramp_C, self.dram_ramp_C) < 0:
+            raise ValueError("ramp widths must be >= 0")
+
+    def act(self, state, ctx: PolicyContext):
+        t_logic = masked_hot(ctx.layer_T, ctx.logic_mask)
+        t_dram = masked_hot(ctx.layer_T, ctx.dram_mask)
+        f_dram = ramp_duty(t_dram, self.dram_trip_C, self.dram_ramp_C,
+                           self.floor)
+        f_logic = jnp.minimum(
+            ramp_duty(t_logic, self.logic_trip_C, self.logic_ramp_C,
+                      self.floor),
+            f_dram)
+        f_power = (ctx.logic_mask * f_logic + ctx.dram_mask * f_dram
+                   + (1.0 - ctx.logic_mask - ctx.dram_mask))
+        return state, f_power, f_logic
+
+
+@dataclasses.dataclass(frozen=True)
+class DVFSPolicy(Policy):
+    """Discrete DVFS stepping over a technology-node table.
+
+    One OP step per interval: above ``trip_C`` (sensed on the hottest
+    die of any kind — DVFS guards the whole stack) step down one OP;
+    below ``trip_C - band_C`` step back up; inside the band hold.
+    Power scales with the OP's ``f·V²`` factor while performance scales
+    with ``f`` only — the split :mod:`repro.policy.dvfs` quantifies and
+    the Pareto bench exploits.
+    """
+    table: DVFSTable = dataclasses.field(
+        default_factory=lambda: build_dvfs_table("22nm"))
+    trip_C: float = 85.0
+    band_C: float = 4.0
+
+    def __post_init__(self):
+        check_trip(self.trip_C)
+        if self.band_C < 0:
+            raise ValueError(f"band_C must be >= 0; got {self.band_C!r}")
+
+    @property
+    def name(self) -> str:
+        return f"dvfs-{self.table.node}"
+
+    def init_state(self):
+        return jnp.int32(self.table.n_ops - 1)        # start at top OP
+
+    def act(self, state, ctx: PolicyContext):
+        t = jnp.maximum(masked_hot(ctx.layer_T, ctx.logic_mask),
+                        masked_hot(ctx.layer_T, ctx.dram_mask))
+        step = jnp.where(t > self.trip_C, jnp.int32(-1),
+                         jnp.where(t < self.trip_C - self.band_C,
+                                   jnp.int32(1), jnp.int32(0)))
+        idx = jnp.clip(state + step, 0, self.table.n_ops - 1)
+        f_power = jnp.asarray(self.table.power_scales(),
+                              jnp.float32)[idx]
+        f_perf = jnp.asarray(self.table.perf_scales(), jnp.float32)[idx]
+        return idx, f_power, f_perf
+
+    def residency(self, duty) -> dict[str, float]:
+        """Intervals spent at each OP, attributed by nearest perf scale
+        (the recorded duty trace IS the per-interval ``f/f₀``)."""
+        perf = np.asarray(self.table.perf_scales())
+        idx = np.abs(np.asarray(duty, np.float64)[..., None]
+                     - perf).argmin(axis=-1)
+        labels = self.table.labels()
+        return {labels[i]: int((idx == i).sum())
+                for i in range(self.table.n_ops) if (idx == i).any()}
+
+
+@dataclasses.dataclass(frozen=True)
+class PredictivePolicy(Policy):
+    """Model-predictive throttle: pick the highest duty whose *forecast*
+    hot spot stays under ``trip_C``.
+
+    The forecast is the closed loop's own thermal RC operator advanced
+    one implicit substep under each candidate duty
+    (``ctx.predict_hot``; built by ``cosim.interval_forecaster`` — the
+    response is affine in the duty, so all candidates cost two inner
+    solves total).  Because it acts on where the temperature is GOING
+    rather than where it is, it shaves the overshoot a reactive ramp
+    pays at every trip.
+    """
+    trip_C: float = 95.0
+    floor: float = 0.25
+    n_cands: int = 8
+
+    def __post_init__(self):
+        check_trip(self.trip_C)
+        check_floor(self.floor)
+        if self.n_cands < 2:
+            raise ValueError("n_cands must be >= 2")
+
+    def act(self, state, ctx: PolicyContext):
+        cands = jnp.linspace(jnp.float32(self.floor), jnp.float32(1.0),
+                             self.n_cands)
+        hot = ctx.predict_hot(cands)
+        # trip_C = inf compares True against any finite forecast
+        ok = hot <= self.trip_C if math.isfinite(self.trip_C) \
+            else jnp.ones_like(hot, bool)
+        f = jnp.max(jnp.where(ok, cands, jnp.float32(self.floor)))
+        return state, f, f

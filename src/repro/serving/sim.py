@@ -264,8 +264,8 @@ def _serving_round(scenario: ServingScenario, arrivals, cost, cap, dp,
     """One throttle↔queue macro-iteration of the serving co-simulation.
 
     Returns ``(q, plan, f_base, residual, repl)`` with ``repl`` the full
-    replay output ``(dyn, peaks, mins, picard_res, f_c, ref_W,
-    leak_Wt)`` of this round (``dyn`` kept for the coarsening error
+    replay output ``(dyn, peaks, mins, picard_res, f_c, ref_W, leak_Wt,
+    dyn_Wt)`` of this round (``dyn`` kept for the coarsening error
     bound).
     """
     tr = scenario.traffic
@@ -300,11 +300,11 @@ def _serving_round(scenario: ServingScenario, arrivals, cost, cap, dp,
         steps_per_interval=scenario.steps_per_interval,
         n_cg=scenario.n_cg, margin=margin, solver="pcg",
         dt_scale=jnp.asarray(plan.dt_scale()))
-    _, peaks, mins, picard_res, f_c, ref_W, leak_Wt = res
+    _, peaks, mins, picard_res, f_c, ref_W, leak_Wt, dyn_Wt = res
     f_new = plan.expand(np.asarray(f_c))
     residual = float(np.abs(f_new - f_base).max())
     return q, plan, f_new, residual, (dyn, peaks, mins, picard_res, f_c,
-                                      ref_W, leak_Wt)
+                                      ref_W, leak_Wt, dyn_Wt)
 
 
 def run_serving_cosim(scenario: ServingScenario,
@@ -354,7 +354,7 @@ def run_serving_cosim(scenario: ServingScenario,
                         scenario, arrivals, cost, cap, dp, f_base, plan,
                         coarsen, spec, grid, pmap, leak_W, dfp, fb,
                         margin)
-        dyn, peaks, mins, picard_res, f_c, ref_W, leak_Wt = repl
+        dyn, peaks, mins, picard_res, f_c, ref_W, leak_Wt, dyn_Wt = repl
         if obs.is_enabled():
             w_req = cost.request_flops
             obs.count("serving/requests", q.latency_s.size)
@@ -373,7 +373,7 @@ def run_serving_cosim(scenario: ServingScenario,
             residual_C=np.asarray(picard_res), throttle=np.asarray(f_c),
             refresh_W=np.asarray(ref_W), leak_W=np.asarray(leak_Wt),
             base_refresh_W=dfp.base_refresh_W() * len(spec.dram_layers),
-            tol_C=fb.picard_tol_C)
+            tol_C=fb.picard_tol_C, dyn_W=np.asarray(dyn_Wt))
         bound = scenario.coarsen_tol * cosim.dc_peak_rise_C(
             dyn.max(axis=0), grid.fields()) if coarsen else 0.0
         out[machine] = ServingReport(

@@ -9,10 +9,18 @@ intervals through three temperature couplings —
    evaluated per cell so a hot bank refreshes harder than a cool one.
 2. **Leakage** — exponential in temperature,
    ``leak0 * exp(beta (T − T_ref))``, applied to every die layer.
-3. **DTM throttle** — a linear ramp-down of all dynamic power once the
-   hottest *logic* cell passes ``dtm_trip_C``; the duty factor f ∈
-   [dtm_floor, 1] is recorded per interval so lost cycles can be
-   accounted as a runtime slowdown (mean 1/f).
+3. **DTM/DVFS policy** — a sampled controller from the
+   ``repro.policy`` family (linear ramp, step trip, hysteresis, PID,
+   per-die throttling, discrete DVFS stepping, model-predictive; see
+   docs/policies.md).  Each interval the policy reads the measured
+   per-layer hot spots and sets a *power* duty (scalar or per-die) that
+   scales the dynamic power, plus a *performance* duty f ∈ (0, 1]
+   recorded per interval so lost cycles can be accounted as a runtime
+   slowdown (mean 1/f).  The default policy is the historical linear
+   ramp off ``dtm_trip_C``/``dtm_ramp_C``/``dtm_floor`` — bit-identical
+   to the pre-policy-engine throttle (tests/test_policy.py) — and the
+   controller state (hysteresis latch, PID integral, DVFS operating
+   point) threads through the scan carry, vmapping per design point.
 
 Refresh and leakage are *instantaneous physics*, so they are solved
 implicitly by **Picard iteration**: iterate k evaluates them at iterate
@@ -47,6 +55,7 @@ from repro.core import models as M
 from repro.core import thermal
 from repro.core.constants import AMBIENT_C, DRAM_LIMIT_C
 from repro.core.floorplan import MM, APFloorplan, SIMDFloorplan
+from repro.policy import Policy, PolicyContext, RampPolicy
 from repro.stack import dram
 from repro.stack.spec import (DRAM, LOGIC, PAPER_STACK, StackParams,
                               StackSpec, dram_on_logic)
@@ -54,7 +63,12 @@ from repro.stack.spec import (DRAM, LOGIC, PAPER_STACK, StackParams,
 
 @dataclasses.dataclass(frozen=True)
 class FeedbackParams:
-    """Feedback-loop constants (hashable -> usable as a jit static arg)."""
+    """Feedback-loop constants (hashable -> usable as a jit static arg).
+
+    ``policy`` selects the DTM/DVFS controller (``repro.policy``); None
+    resolves to the classic linear ramp built from the ``dtm_*`` fields
+    below, which therefore keep their historical meaning (and their
+    bit-identical trajectories)."""
     leak_beta: float = 0.012     # 1/K exponential leakage slope (~2x / 60 K)
     t_ref_C: float = AMBIENT_C   # leakage reference temperature
     n_picard: int = 6            # fixed Picard iterations per interval
@@ -63,6 +77,27 @@ class FeedbackParams:
     dtm_ramp_C: float = 10.0     # °C over which power ramps down to floor
     dtm_floor: float = 0.25      # minimum DTM duty factor
     refresh_feedback: bool = True   # False -> refresh pinned at 1x
+    policy: Policy | None = None    # None -> ramp from the dtm_* fields
+
+    def __post_init__(self):
+        if not (0.0 < self.dtm_floor <= 1.0):
+            raise ValueError("dtm_floor must lie in (0, 1] (0 breaks the "
+                             "mean(1/f) slowdown accounting, > 1 is not "
+                             f"a floor); got {self.dtm_floor!r}")
+        if math.isnan(self.dtm_trip_C) or self.dtm_trip_C == -math.inf:
+            raise ValueError("dtm_trip_C must be a real temperature or "
+                             "math.inf (= DTM never trips); got "
+                             f"{self.dtm_trip_C!r}")
+        if self.dtm_ramp_C < 0:
+            raise ValueError("dtm_ramp_C must be >= 0 (0 = step trip); "
+                             f"got {self.dtm_ramp_C!r}")
+
+    def resolved_policy(self) -> Policy:
+        """The controller the replay actually runs."""
+        if self.policy is not None:
+            return self.policy
+        return RampPolicy(trip_C=self.dtm_trip_C, ramp_C=self.dtm_ramp_C,
+                          floor=self.dtm_floor)
 
     @classmethod
     def disabled(cls) -> "FeedbackParams":
@@ -117,20 +152,32 @@ def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
             Minv = 1.0 / (cap3 / dt + theta * diagA)
             return lambda rhs: thermal.pcg_fixed(lhs, Minv, rhs, n_cg)
     lm3 = logic_mask[:, None, None]
+    # DRAM layers are exactly the refresh-bearing ones (base refresh is
+    # strictly positive on every DRAM die) — derived here so per-die
+    # policies need no extra replay argument
+    dram_mask = (jnp.sum(refresh0, axis=(1, 2)) > 0).astype(
+        logic_mask.dtype)
+    policy = fb.resolved_policy()
 
-    def interval(dTc, xs):
+    def interval(carry, xs):
+        dTc, pstate = carry
         P_dyn, scale = xs
         solve = solve_for(scale)
-        # DTM actuates on the MEASURED (start-of-interval) hot spot — a
-        # real throttle controller reads the previous temperature sample.
-        # Iterating it on the end-of-interval state instead couples a
-        # gain->1 bang-bang controller into the fixed point and Picard
-        # limit-cycles (~40 C swings); sampled actuation keeps only the
-        # weak, contractive couplings (refresh bins, leakage) implicit.
-        t_logic = jnp.max(jnp.where(lm3 > 0, dTc + t_amb, -jnp.inf))
-        f = jnp.clip(1.0 - (t_logic - fb.dtm_trip_C) / fb.dtm_ramp_C,
-                     fb.dtm_floor, 1.0)
-        P_base = f * P_dyn
+        # The policy actuates on the MEASURED (start-of-interval) hot
+        # spots — a real DTM controller reads the previous temperature
+        # sample.  Iterating it on the end-of-interval state instead
+        # couples a gain->1 bang-bang controller into the fixed point
+        # and Picard limit-cycles (~40 C swings); sampled actuation
+        # keeps only the weak, contractive couplings (refresh bins,
+        # leakage) implicit.
+        layer_T = jnp.max(dTc, axis=(1, 2)) + t_amb
+        predict = cosim.interval_forecaster(A, solve, lm3, t_amb)
+        ctx = PolicyContext(
+            layer_T=layer_T, logic_mask=logic_mask, dram_mask=dram_mask,
+            predict_hot=predict(dTc, P_dyn, leak0 + refresh0))
+        pstate, f_power, f = policy.act(pstate, ctx)
+        fp3 = f_power if jnp.ndim(f_power) == 0 else f_power[:, None, None]
+        P_base = fp3 * P_dyn
 
         def picard(_, st):
             dTk, _res, _aux = st
@@ -154,15 +201,18 @@ def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
         dTn, res, (ref_W, leak_W) = jax.lax.fori_loop(
             0, fb.n_picard, picard, init)
         die = dTn[:n_die, margin:margin + die_n, margin:margin + die_n]
-        return dTn, (jnp.max(die, axis=(1, 2)), jnp.min(die, axis=(1, 2)),
-                     res, f, ref_W, leak_W)
+        return (dTn, pstate), (
+            jnp.max(die, axis=(1, 2)), jnp.min(die, axis=(1, 2)),
+            res, f, ref_W, leak_W, jnp.sum(P_base))
 
     dT0 = jnp.zeros_like(dyn_frames[0])
     scales = jnp.ones(dyn_frames.shape[0], dyn_frames.dtype) \
         if dt_scale is None else jnp.asarray(dt_scale, dyn_frames.dtype)
-    dT_end, (mx, mn, res, f, ref_W, leak_W) = \
-        jax.lax.scan(interval, dT0, (dyn_frames, scales))
-    return dT_end + t_amb, mx + t_amb, mn + t_amb, res, f, ref_W, leak_W
+    (dT_end, _), (mx, mn, res, f, ref_W, leak_W, dyn_W) = \
+        jax.lax.scan(interval, (dT0, policy.init_state()),
+                     (dyn_frames, scales))
+    return (dT_end + t_amb, mx + t_amb, mn + t_amb, res, f, ref_W,
+            leak_W, dyn_W)
 
 
 _STATIC = ("fb", "steps_per_interval", "n_cg", "n_die", "margin", "die_n",
@@ -194,7 +244,11 @@ def closed_loop_replay(dyn_frames, leak0, refresh0, logic_mask, F: dict,
     coarsened boundaries (its reaction time follows the local step).
 
     Returns (T_end [L,NY,NX], peak_C [T,n_die], min_C [T,n_die],
-    residual_C [T], throttle [T], refresh_W [T], leak_W [T]).
+    residual_C [T], throttle [T], refresh_W [T], leak_W [T],
+    dyn_W [T]).  ``throttle`` is the policy's *performance* duty (what
+    scales runtime); ``dyn_W`` is the policy-scaled dynamic power
+    actually dissipated, so refresh + leak + dyn is the stack's total
+    draw per interval (the energy axis of the policy Pareto bench).
     """
     return _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
                         interval_dt, theta, t_amb, fb=fb,
@@ -342,6 +396,7 @@ class StackReport:
     leak_W: np.ndarray          # [T] total leakage power
     base_refresh_W: float       # 1x refresh total of all DRAM dies
     tol_C: float = FeedbackParams.picard_tol_C   # the run's residual bar
+    dyn_W: np.ndarray | None = None   # [T] policy-scaled dynamic power
 
     @property
     def times(self) -> np.ndarray:
@@ -376,6 +431,24 @@ class StackReport:
     def dtm_slowdown(self) -> float:
         """Runtime inflation from throttling: mean(1/f) >= 1."""
         return float(np.mean(1.0 / self.throttle))
+
+    @property
+    def energy_J(self) -> float:
+        """Total energy over the replay window (dynamic + leak + refresh).
+
+        Requires a replay that recorded ``dyn_W`` (every post-policy-engine
+        replay does); older pickled reports raise."""
+        if self.dyn_W is None:
+            raise ValueError("this report predates dyn_W recording")
+        return float(self.interval_s
+                     * (self.dyn_W + self.leak_W + self.refresh_W).sum())
+
+    @property
+    def energy_per_work_J(self) -> float:
+        """Energy divided by the fraction of full-speed work completed —
+        the energy-to-solution axis of the policy Pareto bench.  A policy
+        that halves power but quarters throughput scores WORSE here."""
+        return self.energy_J / float(np.mean(self.throttle))
 
     def time_above(self, limit_C: float = DRAM_LIMIT_C,
                    layers: tuple[int, ...] | None = None) -> np.ndarray:
@@ -488,7 +561,7 @@ def replay_cases(cases, spec: StackSpec, fb: FeedbackParams, grid_n: int,
         closed_loop_sharded, n_shards=n_shards)
     with obs.span("feedback/replay", cases=len(labels), grid_n=grid_n,
                   solver=solver, n_shards=n_shards or 0):
-        _, peaks, mins, res, thr, ref_W, leak_W = replay(
+        _, peaks, mins, res, thr, ref_W, leak_W, dyn_W = replay(
             jnp.asarray(np.stack(dyns)), jnp.asarray(np.stack(leaks)),
             jnp.asarray(np.stack(refs)), jnp.asarray(np.stack(masks)), Fb,
             jnp.stack(caps), interval_dt, theta, fb=fb, die_n=grid_n,
@@ -508,6 +581,11 @@ def replay_cases(cases, spec: StackSpec, fb: FeedbackParams, grid_n: int,
                          res_h.reshape(len(labels), -1).max(axis=1))
         obs.observe_many("feedback/throttle_duty",
                          thr_h.reshape(len(labels), -1).mean(axis=1))
+        pol = fb.resolved_policy()
+        obs.observe_many(f"policy/{pol.name}/duty", thr_h.ravel())
+        resid = pol.residency(thr_h)
+        for op, n in (resid or {}).items():
+            obs.count(f"policy/{pol.name}/residency/{op}", n)
     base_ref = dram.DRAMFloorplan(die_w_mm=1.0).base_refresh_W() \
         * len(spec.dram_layers)
     return {
@@ -516,7 +594,8 @@ def replay_cases(cases, spec: StackSpec, fb: FeedbackParams, grid_n: int,
             peak_C=np.asarray(peaks[i]), min_C=np.asarray(mins[i]),
             residual_C=np.asarray(res[i]), throttle=np.asarray(thr[i]),
             refresh_W=np.asarray(ref_W[i]), leak_W=np.asarray(leak_W[i]),
-            base_refresh_W=base_ref, tol_C=fb.picard_tol_C)
+            base_refresh_W=base_ref, tol_C=fb.picard_tol_C,
+            dyn_W=np.asarray(dyn_W[i]))
         for i, label in enumerate(labels)}
 
 

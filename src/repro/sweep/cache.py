@@ -34,7 +34,7 @@ from repro.sweep.engine import SweepRecord, SweepResult, resolve_fb
 from repro.sweep.spec import SweepPoint, SweepSpec
 
 _ARRAYS = ("peak_C", "min_C", "residual_C", "throttle", "refresh_W",
-           "leak_W")
+           "leak_W", "dyn_W")
 
 #: everything a damaged npz can throw while being opened/read: not a
 #: zip at all, zip ok but members truncated/absent, manifest not JSON
@@ -63,7 +63,8 @@ def store(result: SweepResult, cache_dir=None) -> Path:
         "spec": result.spec.canonical(),
         "records": [{"machine": r.machine,
                      "point": [r.point.workload, r.point.size,
-                               r.point.n_dram, r.point.fb_mode]}
+                               r.point.n_dram, r.point.fb_mode,
+                               r.point.policy]}
                     for r in result.records],
     }
     tmp = path.with_suffix(".tmp.npz")
@@ -106,8 +107,9 @@ def _read(spec: SweepSpec, path: Path) -> SweepResult | None:
         interval_dt = spec.t_end / spec.n_intervals
         records = []
         for i, meta in enumerate(manifest["records"]):
-            w, size, n_dram, fb_mode = meta["point"]
-            point = SweepPoint(w, int(size), int(n_dram), fb_mode)
+            w, size, n_dram, fb_mode, policy = meta["point"]
+            point = SweepPoint(w, int(size), int(n_dram), fb_mode,
+                               policy)
             stack_spec = dram_on_logic(int(n_dram))
             base_ref = dram.DRAMFloorplan(die_w_mm=1.0).base_refresh_W() \
                 * int(n_dram)
@@ -116,7 +118,8 @@ def _read(spec: SweepSpec, path: Path) -> SweepResult | None:
                 label=f"{point.label}/{meta['machine']}",
                 interval_s=interval_dt, spec=stack_spec,
                 base_refresh_W=base_ref,
-                tol_C=resolve_fb(fb_mode).picard_tol_C, **arrays)
+                tol_C=resolve_fb(fb_mode, policy=policy).picard_tol_C,
+                **arrays)
             records.append(SweepRecord(point=point,
                                        machine=meta["machine"],
                                        report=report))

@@ -1,7 +1,8 @@
 """Lower a :class:`~repro.sweep.spec.SweepSpec` to batched replays.
 
-Scenario points that share a stack height and feedback mode share one
-jitted program, so the engine groups the grid by ``(n_dram, fb_mode)``
+Scenario points that share a stack height, feedback mode, and DTM
+policy share one jitted program, so the engine groups the grid by
+``(n_dram, fb_mode, policy)``
 and replays each group as a SINGLE vmapped ``closed_loop_batch`` call
 over every (point × machine) case — the same path
 ``stack/feedback.run_stack_cosim`` uses, now fed from the declarative
@@ -22,18 +23,26 @@ from repro import obs
 from repro.core import cosim
 from repro.core import models as M
 from repro.core.constants import DRAM_LIMIT_C
+from repro import policy as policy_registry
 from repro.stack import feedback
 from repro.stack.spec import PAPER_STACK, StackParams, dram_on_logic
 from repro.sweep.spec import SweepPoint, SweepSpec
 
 
-def resolve_fb(mode: str, n_picard: int = 6) -> feedback.FeedbackParams:
-    """Map a spec-level feedback mode to its FeedbackParams.
+def resolve_fb(mode: str, n_picard: int = 6,
+               policy: str = "ramp") -> feedback.FeedbackParams:
+    """Map a spec-level (feedback mode, policy name) to FeedbackParams.
 
     ``n_picard`` applies to the implicit-coupling modes; "open" keeps
-    the fixed 2-iterate count of :meth:`FeedbackParams.disabled`."""
+    the fixed 2-iterate count of :meth:`FeedbackParams.disabled`.
+    ``policy`` (a ``repro.policy`` registry name) selects the DTM/DVFS
+    controller in "closed" mode only — "nodtm" and "open" disable DTM
+    by definition, so the policy axis is inert there (the sweep grid
+    still enumerates the combination; it is served from the same
+    replay)."""
     if mode == "closed":
-        return feedback.FeedbackParams(n_picard=n_picard)
+        pol = None if policy == "ramp" else policy_registry.get(policy)
+        return feedback.FeedbackParams(n_picard=n_picard, policy=pol)
     if mode == "nodtm":
         return feedback.FeedbackParams(dtm_trip_C=math.inf,
                                        n_picard=n_picard)
@@ -89,13 +98,14 @@ class SweepResult:
 
     def table(self) -> str:
         """Per-point verdict table (CSV-ish, one row per record)."""
-        lines = ["workload,size,n_dram,fb,machine,logic_peak_C,"
+        lines = ["workload,size,n_dram,fb,policy,machine,logic_peak_C,"
                  "dram_peak_C,refresh_x,dtm_x,above_85C_s,resid_C,verdict"]
         for r in self.records:
             p, rep = r.point, r.report
             dram_pk = rep.dram_peak_C.max() if rep.spec.dram_layers else 0.0
             lines.append(
-                f"{p.workload},{p.size},{p.n_dram},{p.fb_mode},{r.machine},"
+                f"{p.workload},{p.size},{p.n_dram},{p.fb_mode},"
+                f"{p.policy},{r.machine},"
                 f"{rep.logic_peak_C.max():.1f},{dram_pk:.1f},"
                 f"{rep.refresh_overhead:.3f},{rep.dtm_slowdown:.3f},"
                 f"{r.time_above_limit_s:.3f},{rep.residual_C.max():.2g},"
@@ -108,18 +118,18 @@ class SweepResult:
 # ---------------------------------------------------------------------------
 
 def _run_group(spec: SweepSpec, points: list[SweepPoint], n_dram: int,
-               fb_mode: str, params: StackParams,
+               fb_mode: str, policy: str, params: StackParams,
                n_shards: int | None = None
                ) -> dict[tuple[SweepPoint, str], SweepRecord]:
-    """Replay one (n_dram, fb_mode) group as a single vmapped batch,
-    optionally partitioned over local devices (``n_shards``)."""
+    """Replay one (n_dram, fb_mode, policy) group as a single vmapped
+    batch, optionally partitioned over local devices (``n_shards``)."""
     stack_spec = dram_on_logic(n_dram, params)
-    fb = resolve_fb(fb_mode, spec.n_picard)
+    fb = resolve_fb(fb_mode, spec.n_picard, policy)
     margin = spec.grid_n // 4
     interval_dt = spec.t_end / spec.n_intervals
 
     with obs.span("sweep/assemble", n_dram=n_dram, fb=fb_mode,
-                  points=len(points)):
+                  policy=policy, points=len(points)):
         keys, cases = [], []
         for p in points:
             dp = cosim.comparable_design_point(p.workload, p.size)
@@ -137,7 +147,7 @@ def _run_group(spec: SweepSpec, points: list[SweepPoint], n_dram: int,
     obs.count("sweep/cases", len(cases))
 
     with obs.span("sweep/replay", n_dram=n_dram, fb=fb_mode,
-                  cases=len(cases)):
+                  policy=policy, cases=len(cases)):
         reports = feedback.replay_cases(
             cases, stack_spec, fb, spec.grid_n, interval_dt,
             theta=spec.theta, steps_per_interval=spec.steps_per_interval,
@@ -170,17 +180,22 @@ def run_sweep(spec: SweepSpec, cache_dir=None, use_cache: bool = True,
         if hit is not None:
             return hit
 
-    by_group: dict[tuple[int, str], list[SweepPoint]] = defaultdict(list)
+    # "nodtm"/"open" ignore the policy axis entirely, so their points
+    # collapse onto one replay group per (n_dram, fb_mode) regardless of
+    # the spec's policy list — no duplicate physics for inert labels
+    by_group: dict[tuple[int, str, str], list[SweepPoint]] = \
+        defaultdict(list)
     for p in spec.points():
-        by_group[(p.n_dram, p.fb_mode)].append(p)
+        pol = p.policy if p.fb_mode == "closed" else "ramp"
+        by_group[(p.n_dram, p.fb_mode, pol)].append(p)
 
     results: dict[tuple[SweepPoint, str], SweepRecord] = {}
     with obs.span("sweep/run", groups=len(by_group)):
-        for (n_dram, fb_mode), pts in sorted(by_group.items()):
+        for (n_dram, fb_mode, pol), pts in sorted(by_group.items()):
             with obs.span("sweep/group", n_dram=n_dram, fb=fb_mode,
-                          points=len(pts)):
+                          policy=pol, points=len(pts)):
                 results.update(_run_group(spec, pts, n_dram, fb_mode,
-                                          params, n_shards))
+                                          pol, params, n_shards))
 
     records = tuple(results[(p, mc)] for p in spec.points()
                     for mc in spec.machines)

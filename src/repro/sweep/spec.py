@@ -1,7 +1,8 @@
 """Declarative sweep specifications and their content hash.
 
 A :class:`SweepSpec` names a full scenario grid — registered workloads ×
-dataset sizes × DRAM die counts × feedback modes (× machines) — plus the
+dataset sizes × DRAM die counts × feedback modes × DTM/DVFS policies
+(× machines) — plus the
 replay resolution (grid, intervals, horizon, solver knobs).  It is pure
 data: :meth:`SweepSpec.points` enumerates the Cartesian product and
 :meth:`SweepSpec.content_hash` digests the *canonical JSON* of every
@@ -24,7 +25,9 @@ import json
 #    instance-scaled histogram bins re-derive every workload trace.
 # 4: ap_backend field (megakernel trace capture) and trace_elems clamp
 #    2048 -> 2^20; traces at sizes past 2048^2 change element counts.
-CACHE_SCHEMA = 4
+# 5: policy axis (DTM/DVFS policy engine) and the dyn_W energy array in
+#    every record; pre-policy entries lack both.
+CACHE_SCHEMA = 5
 
 #: trace-capture execution paths for the AP workloads (all bit-exact;
 #: the field exists so a spec records how its traces were captured)
@@ -41,15 +44,18 @@ FB_MODES = ("closed", "nodtm", "open")
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
-    """One scenario: a (workload, dataset size, stack, feedback) tuple."""
+    """One scenario: a (workload, size, stack, feedback, policy) tuple."""
     workload: str
     size: int            # dataset size N (the AP is sized to it, §3)
     n_dram: int          # DRAM dies stacked on the logic stack
     fb_mode: str         # one of FB_MODES
+    policy: str = "ramp"     # DTM/DVFS controller (repro.policy names);
+    # only "closed" mode runs it — "nodtm"/"open" disable DTM entirely
 
     @property
     def label(self) -> str:
-        return f"{self.workload}/N{self.size}/dram{self.n_dram}/{self.fb_mode}"
+        return (f"{self.workload}/N{self.size}/dram{self.n_dram}/"
+                f"{self.fb_mode}/{self.policy}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +65,7 @@ class SweepSpec:
     sizes: tuple[int, ...] = (2 ** 20,)
     n_dram: tuple[int, ...] = (2,)
     fb_modes: tuple[str, ...] = ("closed",)
+    policies: tuple[str, ...] = ("ramp",)   # repro.policy registry names
     machines: tuple[str, ...] = ("ap", "simd")
     grid_n: int = 16
     n_intervals: int = 24
@@ -90,6 +97,9 @@ class SweepSpec:
             if mode not in FB_MODES:
                 raise ValueError(f"unknown fb_mode {mode!r}; "
                                  f"expected one of {FB_MODES}")
+        from repro import policy as policy_registry
+        for pol in self.policies:
+            policy_registry.get(pol)             # raises on unknown names
         for mc in self.machines:
             if mc not in ("ap", "simd"):
                 raise ValueError(f"unknown machine {mc!r}")
@@ -112,14 +122,15 @@ class SweepSpec:
     # -------------------------------------------------------------- points
     def points(self) -> tuple[SweepPoint, ...]:
         """The Cartesian scenario grid, in deterministic order."""
-        return tuple(SweepPoint(w, s, d, f) for w, s, d, f
+        return tuple(SweepPoint(w, s, d, f, p) for w, s, d, f, p
                      in itertools.product(self.workloads, self.sizes,
-                                          self.n_dram, self.fb_modes))
+                                          self.n_dram, self.fb_modes,
+                                          self.policies))
 
     @property
     def n_points(self) -> int:
         return (len(self.workloads) * len(self.sizes) * len(self.n_dram)
-                * len(self.fb_modes))
+                * len(self.fb_modes) * len(self.policies))
 
     def trace_elems(self, size: int) -> int:
         """Small-instance element count for a dataset size — delegates

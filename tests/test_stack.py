@@ -215,7 +215,7 @@ def test_disabled_feedback_matches_cosim_within_tenth_degree():
         spec, grid, trace, pmap, fp.leakage_W(),
         dram.DRAMFloorplan(die_w_mm=fp.die_w_mm), 0.0)
     assert ref0.sum() == 0.0
-    _, pk, mn, res, thr, ref_W, leak_W = feedback.closed_loop_replay(
+    _, pk, mn, res, thr, ref_W, leak_W, dyn_W = feedback.closed_loop_replay(
         jnp.asarray(dyn), jnp.asarray(leak0), jnp.asarray(ref0),
         jnp.asarray(lmask), grid.fields(), grid.capacity_field(),
         interval_dt, fb=feedback.FeedbackParams.disabled(),

@@ -25,6 +25,8 @@ def test_spec_validation():
         SweepSpec(workloads=("dmm",), machines=("gpu",))
     with pytest.raises(ValueError):
         SweepSpec(workloads=("dmm",), ap_backend="bogus")
+    with pytest.raises(ValueError, match="unknown policy"):
+        SweepSpec(workloads=("dmm",), policies=("bogus",))
 
 
 def test_spec_hash_sensitivity():
@@ -34,7 +36,8 @@ def test_spec_hash_sensitivity():
     assert spec.content_hash() == SweepSpec(**_QUICK).content_hash()
     perturbations = dict(
         workloads=("hist", "sort"), sizes=(8192,), n_dram=(2,),
-        fb_modes=("closed",), machines=("ap",), grid_n=12, n_intervals=8,
+        fb_modes=("closed",), policies=("ramp", "perdie"),
+        machines=("ap",), grid_n=12, n_intervals=8,
         t_end=0.5, steps_per_interval=2, n_cg=16, theta=0.5, n_picard=8,
         solver="mg", n_mg=5, ap_backend="megakernel")
     for field, value in perturbations.items():
@@ -66,7 +69,7 @@ def test_sweep_cache_roundtrip_bit_identical(tmp_path):
         assert a.report.label == b.report.label
         assert a.verdict_ok == b.verdict_ok
         for name in ("peak_C", "min_C", "residual_C", "throttle",
-                     "refresh_W", "leak_W"):
+                     "refresh_W", "leak_W", "dyn_W"):
             av = getattr(a.report, name)
             bv = getattr(b.report, name)
             assert av.dtype == bv.dtype
@@ -120,6 +123,42 @@ def test_sweep_record_order_matches_points(tmp_path):
     # and every record exposes the DRAM-judged verdict layers
     for r in res.records:
         assert r.limit_layers == r.report.spec.dram_layers
+
+
+def test_policy_axis_sweeps_distinct_controllers(tmp_path):
+    """policies is a first-class grid dimension: closed-mode points run
+    one replay group per policy (distinct trajectories once the DTM
+    engages), the "ramp" rows are the pre-axis default, and labels carry
+    the policy name."""
+    spec = SweepSpec(**dict(_QUICK, fb_modes=("closed",),
+                            policies=("ramp", "step")))
+    res = run_sweep(spec, cache_dir=tmp_path)
+    assert len(res.records) == 2 * len(spec.machines)
+    assert {r.point.policy for r in res.records} == {"ramp", "step"}
+    for r in res.records:
+        assert r.label.endswith(f"{r.point.policy}/{r.machine}")
+    base = run_sweep(SweepSpec(**dict(_QUICK, fb_modes=("closed",))),
+                     cache_dir=tmp_path)
+    for a, b in zip([r for r in res.records if r.point.policy == "ramp"],
+                    base.records):
+        np.testing.assert_array_equal(a.report.peak_C, b.report.peak_C)
+        np.testing.assert_array_equal(a.report.throttle,
+                                      b.report.throttle)
+
+
+def test_policy_axis_inert_outside_closed_mode(tmp_path):
+    """"nodtm"/"open" disable DTM entirely, so the policy axis is a pure
+    label there: both policy rows come from ONE replay and their arrays
+    are identical."""
+    spec = SweepSpec(**dict(_QUICK, policies=("ramp", "pid")))
+    res = run_sweep(spec, cache_dir=tmp_path)
+    by_pol = {}
+    for r in res.records:
+        by_pol.setdefault((r.point.policy, r.machine), r)
+    for mc in spec.machines:
+        a, b = by_pol[("ramp", mc)], by_pol[("pid", mc)]
+        np.testing.assert_array_equal(a.report.peak_C, b.report.peak_C)
+        np.testing.assert_array_equal(a.report.dyn_W, b.report.dyn_W)
 
 
 def test_registry_rejects_duplicates():

@@ -61,6 +61,18 @@ def check_links() -> list[str]:
     return errors
 
 
+def check_index() -> list[str]:
+    """Every docs/*.md page must be listed in docs/index.md — the map
+    is what keeps new pages discoverable (README links only the map)."""
+    index = ROOT / "docs" / "index.md"
+    if not index.exists():
+        return ["docs/index.md is missing (the docs map must exist)"]
+    text = index.read_text()
+    return [f"docs/index.md: page docs/{md.name} is not listed"
+            for md in sorted((ROOT / "docs").glob("*.md"))
+            if md.name != "index.md" and md.name not in text]
+
+
 def run_doctests() -> int:
     failures = 0
     for doc in DOCTEST_DOCS:
@@ -77,10 +89,14 @@ def main() -> int:
     errors = check_links()
     for e in errors:
         print(f"LINK ERROR: {e}")
+    index_errors = check_index()
+    for e in index_errors:
+        print(f"INDEX ERROR: {e}")
+    errors += index_errors
     failures = run_doctests()
     if errors or failures:
         return 1
-    print("docs OK: links resolve, doctests pass")
+    print("docs OK: links resolve, index complete, doctests pass")
     return 0
 
 
