@@ -13,7 +13,7 @@ bench:
 # the CI smoke lane: thermal (incl. 256^2 solver shoot-out), stack,
 # sweep, and the DTM/DVFS policy Pareto shoot-out
 bench-quick:
-	$(PY) -m benchmarks.run --quick thermal stack sweep policy
+	$(PY) -m benchmarks.run --quick thermal stack sweep policy faults
 
 # refresh the committed perf baseline from a local quick run
 # (tolerances in benchmarks/baseline.json are preserved; only the

@@ -13,10 +13,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_ap_backend, bench_cycles, bench_policy,
-                        bench_roofline, bench_serving, bench_speedup_power,
-                        bench_stack, bench_sweep, bench_thermal,
-                        bench_workloads)
+from benchmarks import (bench_ap_backend, bench_cycles, bench_faults,
+                        bench_policy, bench_roofline, bench_serving,
+                        bench_speedup_power, bench_stack, bench_sweep,
+                        bench_thermal, bench_workloads)
 
 SECTIONS = {
     "cycles": ("§2.2 cycle-count claims", bench_cycles.main),
@@ -35,6 +35,8 @@ SECTIONS = {
                "flips over the policy axis", bench_policy.main),
     "serving": ("LLM-serving traffic -> thermal co-simulation "
                 "(SLA + coarsening headline)", bench_serving.main),
+    "faults": ("fault injection: sensor faults vs GuardedPolicy, "
+               "power spikes, solver fallback chain", bench_faults.main),
     "roofline": ("§Roofline per-cell terms (dry-run artifacts)",
                  bench_roofline.main),
     "ap_backend": ("paper-technique x assigned archs (AP vs TPU)",

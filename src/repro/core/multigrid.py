@@ -351,7 +351,10 @@ def mg_solve_fields(b: jax.Array, F: dict, d_extra=0.0, tol: float = 1e-8,
         res = jnp.linalg.norm(r)
         converged = res <= tol * bnorm
         stalled = (it >= 2) & (res > 0.9 * prev)
-        return ~(converged | stalled) & (it < max_cycles)
+        # health guard: a non-finite residual means the cycle diverged —
+        # every comparison above is False on NaN, so without this the
+        # loop would spin NaN through all max_cycles before returning
+        return ~(converged | stalled) & jnp.isfinite(res) & (it < max_cycles)
 
     def body(state):
         x, r, it, _ = state

@@ -33,6 +33,7 @@ logic stacks come from ``repro.stack.spec.dram_on_logic``.
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
@@ -47,7 +48,7 @@ from repro.stack.spec import (PAPER_SPEC, PAPER_STACK, StackParams,
 __all__ = [  # re-exports kept for callers of the pre-refactor module
     "AMBIENT_C", "PAPER_SPEC", "PAPER_STACK", "StackParams", "StackSpec",
     "spec_from_params", "Grid", "package_resistance", "steady_state",
-    "steady_state_stats", "SOLVERS",
+    "steady_state_stats", "SOLVERS", "HEALTH_RTOL", "fallback_chain",
     "apply_operator", "apply_operator_fields", "pcg", "pcg_fixed",
     "transient", "transient_solve", "explicit_dt", "transient_implicit",
     "transient_implicit_fields", "transient_solve_implicit",
@@ -57,6 +58,15 @@ __all__ = [  # re-exports kept for callers of the pre-refactor module
 #: (the original), stand-alone geometric multigrid V-cycles, and
 #: V-cycle-preconditioned CG (see ``core/multigrid.py``, DESIGN.md §7.5)
 SOLVERS = ("pcg", "mg", "mgcg")
+
+#: TRUE-relative-residual bar for "this steady solve is healthy".
+#: Deliberately loose: converged solves stop at the float32 residual
+#: floor rather than their nominal tol, and that floor grows with the
+#: grid (measured ~6e-3 for mgcg on the 256^2 shoot-out stack), so the
+#: bar must sit well above it — yet orders of magnitude below any
+#: diverged (non-finite) or genuinely stagnated solve, which is what
+#: the fallback chain catches.
+HEALTH_RTOL = 2e-2
 
 
 def package_resistance(die_area_m2: float, p: StackParams = PAPER_STACK
@@ -399,6 +409,63 @@ def _solve_fields(b, F, solver: str, use_pallas: bool, tol: float = 1e-8):
     return _cg_solve_fields_stats(b, F, tol)
 
 
+def fallback_chain(solver: str) -> tuple[tuple[str, float], ...]:
+    """Attempt list for one guarded fields solve: (backend, tol scale).
+
+    Starts at the requested backend, continues down the remaining of
+    the ``mg -> mgcg -> pcg`` ladder (each rung trades speed for
+    robustness), and always ends with a tightened-tolerance Jacobi-PCG
+    — the slowest but most unconditionally dependable backend here.
+    """
+    order = ("mg", "mgcg", "pcg")
+    if solver not in order:
+        raise ValueError(f"unknown solver {solver!r}; expected {SOLVERS}")
+    tail = order[order.index(solver):]
+    return tuple((s, 1.0) for s in tail) + (("pcg", 0.1),)
+
+
+def _solve_fields_guarded(b, F, solver: str, use_pallas: bool,
+                          tol: float = 1e-8):
+    """:func:`_solve_fields` hardened by health checks + fallback.
+
+    After each attempt the TRUE relative residual ``||b - G x||/||b||``
+    is recomputed; a non-finite or ``> HEALTH_RTOL`` residual (a
+    diverged or stagnated solve — or a backend forced down by
+    ``repro.faults.inject.poison_solver``) advances to the next rung of
+    :func:`fallback_chain`.  Returns ``(dT, iterations, stats)`` with
+    ``stats = {"attempts", "solved_by", "rel_residual"}``; retries are
+    counted in ``obs`` under ``thermal/fallback/*``.
+    """
+    from repro.faults import inject
+    bnorm = float(jnp.linalg.norm(b))
+    if bnorm == 0.0 or not math.isfinite(bnorm):
+        # zero RHS: x = 0 is exact.  A non-finite RHS no backend can fix
+        # — report it honestly rather than looping the chain.
+        resid = 0.0 if bnorm == 0.0 else math.inf
+        return jnp.zeros_like(b), 0, {"attempts": 1, "solved_by": solver,
+                                      "rel_residual": resid}
+    last = None
+    for i, (s, scale) in enumerate(fallback_chain(solver)):
+        if inject.solver_poisoned(s):
+            dT, iters = jnp.full_like(b, jnp.nan), 0
+        else:
+            dT, iters = _solve_fields(b, F, s, use_pallas, tol * scale)
+        resid = float(jnp.linalg.norm(b - apply_operator_fields(dT, F))
+                      / bnorm)
+        last = (dT, int(iters), {"attempts": i + 1, "solved_by": s,
+                                 "rel_residual": resid})
+        if math.isfinite(resid) and resid <= HEALTH_RTOL:
+            if i:
+                obs.count("thermal/fallback/recovered")
+            return last
+        if i == 0:
+            obs.count("thermal/fallback/engaged")
+        obs.count("thermal/fallback/retries")
+        obs.count(f"thermal/fallback/unhealthy[{s}]")
+    obs.count("thermal/fallback/exhausted")
+    return last
+
+
 def steady_state_stats(power: np.ndarray | jax.Array, grid: Grid,
                        t_amb: float = AMBIENT_C, use_pallas: bool = False,
                        solver: str = "pcg", tol: float = 1e-8
@@ -406,31 +473,41 @@ def steady_state_stats(power: np.ndarray | jax.Array, grid: Grid,
     """:func:`steady_state` plus solver statistics.
 
     Returns ``(T_die, stats)`` with ``stats = {"iterations", "solver",
-    "rel_residual"}``: ``iterations`` counts CG iterations (pcg/mgcg)
-    or V-cycles (mg), and ``rel_residual`` is the TRUE relative
-    residual ``||b - G x|| / ||b||`` recomputed after the solve — the
-    honest convergence signal (the mg backend in particular stops at
-    the float32 residual floor rather than the nominal ``tol``, and a
-    pathological hierarchy could stall earlier; callers can check
-    instead of trusting the iteration count).
+    "rel_residual", "attempts", "solved_by"}``: ``iterations`` counts
+    CG iterations (pcg/mgcg) or V-cycles (mg), and ``rel_residual`` is
+    the TRUE relative residual ``||b - G x|| / ||b||`` recomputed after
+    the solve — the honest convergence signal (the mg backend in
+    particular stops at the float32 residual floor rather than the
+    nominal ``tol``, and a pathological hierarchy could stall earlier).
+    An unhealthy solve (non-finite or ``> HEALTH_RTOL`` residual)
+    automatically retries down :func:`fallback_chain`; ``attempts`` and
+    ``solved_by`` record how far it had to go (``solver`` stays the
+    REQUESTED backend).  Non-finite power maps raise ``ValueError`` up
+    front.
     """
     with obs.span("thermal/steady", solver=solver,
                   shape=f"{grid.n_layers}x{grid.dom_ny}x{grid.dom_nx}"):
         F = grid.fields()
         power = grid.pad_power(power)
+        if not bool(jnp.isfinite(power).all()):
+            raise ValueError(
+                "steady_state: power map has non-finite cells; refusing "
+                "to solve — NaN temperatures would silently poison every "
+                "downstream verdict")
         m = grid.margin
         if m:
             power = jnp.pad(power, ((0, 0), (m, m), (m, m)))
-        dT, iters = _solve_fields(power, F, solver, use_pallas, tol)
-        resid = jnp.linalg.norm(power - apply_operator_fields(dT, F)) \
-            / jnp.linalg.norm(power)
+        dT, iters, fstats = _solve_fields_guarded(power, F, solver,
+                                                  use_pallas, tol)
         n_die = grid.n_die_layers
         if m:
             dT = dT[:n_die, m:m + grid.ny, m:m + grid.nx]
         else:
             dT = dT[:n_die]
-        stats = {"iterations": int(iters), "solver": solver,
-                 "rel_residual": float(resid)}
+        stats = {"iterations": iters, "solver": solver,
+                 "rel_residual": fstats["rel_residual"],
+                 "attempts": fstats["attempts"],
+                 "solved_by": fstats["solved_by"]}
     obs.count("thermal/steady/solves")
     obs.observe(f"thermal/steady/iterations[{solver}]", stats["iterations"])
     obs.observe("thermal/steady/rel_residual", stats["rel_residual"])

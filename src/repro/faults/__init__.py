@@ -1,0 +1,24 @@
+"""``repro.faults`` — fault injection & graceful degradation.
+
+Three pieces (docs/faults.md is the doctested tour):
+
+- :mod:`repro.faults.models` — deterministic, jit/vmap-compatible
+  sensor-fault models (:class:`SensorFaultSpec`) threaded through the
+  closed-loop scan carry via ``FeedbackParams.faults``, plus host-side
+  power-spike injection (:class:`PowerFaultSpec`).
+- :mod:`repro.faults.guard` — :class:`GuardedPolicy`, hardening any
+  registered DTM controller with median-of-K sensor fusion, last-good
+  hold, and a fail-safe floor duty (registered as ``"guarded"``).
+- :mod:`repro.faults.inject` — :func:`poison_solver`, the deterministic
+  forced-divergence hook behind the solver fallback chain.
+"""
+from repro.faults.guard import GuardedPolicy
+from repro.faults.inject import poison_solver, solver_poisoned
+from repro.faults.models import (FaultState, PowerFaultSpec,
+                                 SensorFaultSpec, inject_power_spikes)
+
+__all__ = [
+    "SensorFaultSpec", "FaultState", "PowerFaultSpec",
+    "inject_power_spikes", "GuardedPolicy", "poison_solver",
+    "solver_poisoned",
+]

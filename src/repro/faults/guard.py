@@ -1,0 +1,99 @@
+"""Graceful degradation for DTM controllers: the :class:`GuardedPolicy`.
+
+Any registered policy senses ``PolicyContext.layer_T`` — under a
+:class:`~repro.faults.models.SensorFaultSpec` that is the (possibly
+stuck, noisy, or NaN) PRIMARY sensor, and a naive controller inherits
+every one of its failure modes: a stuck-at-ambient sensor never trips
+the throttle, a dropout NaN propagates straight into the duty and from
+there into every temperature of the replay.
+
+``GuardedPolicy`` wraps an inner policy with three layers of hardening,
+in order:
+
+1. **median-of-K** over the redundant sensors
+   (``PolicyContext.sensor_T``, NaN-skipping) — rejects any minority of
+   stuck/outlier sensors per layer;
+2. **plausibility + last-good hold** — a fused reading must be finite,
+   inside ``[lo_C, hi_C]``, and within ``max_step_C`` of the last
+   accepted value; otherwise the guard holds the last good reading for
+   that layer;
+3. **fail-safe floor** — after ``hold_max`` consecutive implausible
+   intervals on any die layer the guard stops trusting its held value
+   and clamps both duties to ``floor`` (thermal safety beats
+   throughput when the stack is flying blind).
+
+The wrapper is itself a frozen-dataclass :class:`Policy`, so it nests
+anywhere a policy goes (``FeedbackParams.policy``, the sweep policy
+axis as ``"guarded"``) and its state — ``(inner state, last-good [L],
+consecutive-bad count [L])`` — threads through the scan carry like any
+controller's.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.core.constants import AMBIENT_C
+from repro.policy.base import Policy, PolicyContext, check_floor
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardedPolicy(Policy):
+    """Median-of-K + last-good-hold + fail-safe floor around ``inner``."""
+    inner: Policy = dataclasses.field(default_factory=Policy)
+    lo_C: float = -20.0          # plausible sensor range (DTS span)
+    hi_C: float = 150.0
+    max_step_C: float = 60.0     # max credible interval-to-interval jump
+    hold_max: int = 3            # consecutive bad intervals before panic
+    floor: float = 0.25          # fail-safe duty once panicked
+
+    def __post_init__(self):
+        check_floor(self.floor)
+        if not (math.isfinite(self.lo_C) and math.isfinite(self.hi_C)
+                and self.lo_C < self.hi_C):
+            raise ValueError("need finite lo_C < hi_C; got "
+                             f"({self.lo_C!r}, {self.hi_C!r})")
+        if not (math.isfinite(self.max_step_C) and self.max_step_C > 0):
+            raise ValueError("max_step_C must be finite and > 0; got "
+                             f"{self.max_step_C!r}")
+        if self.hold_max < 1:
+            raise ValueError(f"hold_max must be >= 1; got {self.hold_max!r}")
+
+    @property
+    def name(self) -> str:
+        return f"guarded-{self.inner.name}"
+
+    def init_state(self, n_layers: int | None = None):
+        if n_layers is None:
+            raise ValueError("GuardedPolicy.init_state needs n_layers "
+                             "(its last-good hold is per layer)")
+        return (self.inner.init_state(n_layers),
+                jnp.full((n_layers,), AMBIENT_C, jnp.float32),
+                jnp.zeros((n_layers,), jnp.int32))
+
+    def act(self, state, ctx: PolicyContext):
+        inner_state, last_good, bad = state
+        readings = ctx.sensor_T
+        if readings is None:         # fault-free replay: one true sensor
+            readings = ctx.layer_T[None, :]
+        fused = jnp.nanmedian(readings, axis=0)
+        plausible = (jnp.isfinite(fused)
+                     & (fused >= self.lo_C) & (fused <= self.hi_C)
+                     & (jnp.abs(fused - last_good) <= self.max_step_C))
+        T_used = jnp.where(plausible, fused, last_good)
+        bad = jnp.where(plausible, jnp.int32(0), bad + 1)
+        inner_state, f_power, f_perf = self.inner.act(
+            inner_state, ctx._replace(layer_T=T_used, sensor_T=None))
+        # panic only on DIE layers the verdict cares about: a spreader
+        # sensor going dark must not floor the whole stack
+        die = (ctx.logic_mask + ctx.dram_mask) > 0
+        panic = jnp.any(die & (bad >= self.hold_max))
+        f_floor = jnp.float32(self.floor)
+        f_power = jnp.where(panic, jnp.minimum(f_power, f_floor), f_power)
+        f_perf = jnp.where(panic, jnp.minimum(f_perf, f_floor), f_perf)
+        return (inner_state, T_used, bad), f_power, f_perf
+
+
+__all__ = ["GuardedPolicy"]

@@ -1,0 +1,199 @@
+"""Deterministic, jit/vmap-compatible fault models for the closed loop.
+
+Real 3D thermal sensors are not the oracle the DTM controllers in
+``repro.policy`` assume: they are noisy, biased, quantized to the DTS
+step, occasionally latch (stuck-at), and sometimes return garbage
+(dropout).  A :class:`SensorFaultSpec` is a frozen, hashable description
+of that sensing regime — it rides on
+:class:`~repro.stack.feedback.FeedbackParams` as a jit static argument,
+and its :meth:`SensorFaultSpec.read` is traced straight into the
+replay's ``lax.scan`` body with the fault state (PRNG key, interval
+counter, stuck-at latches) threaded through the scan carry exactly like
+policy state.  Everything is seeded ``jax.random``, so a replay under
+faults is bitwise reproducible (and device-count-invariant under
+``closed_loop_sharded``; ``tests/test_faults.py``).
+
+Sub-faults whose knob is zero are compile-time dead: ``read`` branches
+on the (static) spec fields in Python, so a disabled sub-fault adds
+ZERO traced operations — and a replay with no spec at all
+(``FeedbackParams.faults = None``) is bit-identical to the fault-free
+program (pinned by a jaxpr-equality test).
+
+:class:`PowerFaultSpec` is the host-side counterpart for the *input*
+trace: deterministic transient power spikes injected on selected
+intervals of the dynamic-power frames before assembly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class FaultState(NamedTuple):
+    """Per-design-point fault carry (fixed-shape jnp leaves).
+
+    ``key``: the spec's PRNG chain; ``t``: interval counter (drives
+    drift); ``latch`` [K, L]: stuck-at sensors' frozen readings (NaN =
+    not yet latched); ``offset`` [K]: per-sensor static bias drawn once
+    at init from the seed.
+    """
+    key: jax.Array
+    t: jax.Array
+    latch: jax.Array
+    offset: jax.Array
+
+
+def _check_finite_nonneg(name: str, v: float) -> None:
+    if not (math.isfinite(v) and v >= 0):
+        raise ValueError(f"{name} must be finite and >= 0; got {v!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SensorFaultSpec:
+    """One deterministic sensing regime for the per-layer hot-spot DTS.
+
+    The replay reads ``n_sensors`` redundant sensors per layer; naive
+    policies see sensor 0 (``PolicyContext.layer_T``), hardened ones
+    see all K (``PolicyContext.sensor_T``,
+    :class:`~repro.faults.guard.GuardedPolicy`).  Per reading, in order:
+
+    - ``offset_C``: per-sensor static bias ~ N(0, offset_C), drawn once
+      from the seed (sensor 0 included — calibration error).
+    - ``drift_C``: common-mode linear drift, ``drift_C`` °C per
+      interval (uncompensated aging; median-of-K cannot reject it, the
+      guard's range check eventually does).
+    - ``noise_C``: white Gaussian read noise, sigma per reading.
+    - ``quant_C``: DTS quantization step (round-to-nearest).
+    - ``n_stuck``: sensors ``[0, n_stuck)`` latch their FIRST reading
+      forever (deterministic stuck-at; sensor 0 first, so one stuck
+      sensor blinds exactly the naive policies).
+    - ``p_dropout``: per reading per interval, probability the sample
+      is lost and returned as NaN.
+    """
+    seed: int = 0
+    n_sensors: int = 3
+    noise_C: float = 0.0
+    offset_C: float = 0.0
+    drift_C: float = 0.0
+    quant_C: float = 0.0
+    n_stuck: int = 0
+    p_dropout: float = 0.0
+
+    def __post_init__(self):
+        if self.n_sensors < 1:
+            raise ValueError("n_sensors must be >= 1; got "
+                             f"{self.n_sensors!r}")
+        for name in ("noise_C", "offset_C", "quant_C"):
+            _check_finite_nonneg(name, getattr(self, name))
+        if not math.isfinite(self.drift_C):
+            raise ValueError(f"drift_C must be finite; got {self.drift_C!r}")
+        if not 0 <= self.n_stuck <= self.n_sensors:
+            raise ValueError("n_stuck must lie in [0, n_sensors]; got "
+                             f"{self.n_stuck!r}")
+        if not (math.isfinite(self.p_dropout)
+                and 0.0 <= self.p_dropout <= 1.0):
+            raise ValueError("p_dropout must lie in [0, 1]; got "
+                             f"{self.p_dropout!r}")
+
+    @property
+    def randomized(self) -> bool:
+        """Does any enabled sub-fault consume PRNG randomness?"""
+        return self.noise_C > 0 or self.p_dropout > 0
+
+    def init_state(self, n_layers: int) -> FaultState:
+        """The scan-carry pytree for one design point (L = n_layers)."""
+        key = jax.random.PRNGKey(self.seed)
+        K = self.n_sensors
+        if self.offset_C > 0:
+            key, sub = jax.random.split(key)
+            offset = self.offset_C * jax.random.normal(sub, (K,))
+        else:
+            offset = jnp.zeros((K,), jnp.float32)
+        latch = jnp.full((K, n_layers), jnp.nan, jnp.float32)
+        return FaultState(key=key, t=jnp.int32(0), latch=latch,
+                          offset=offset.astype(jnp.float32))
+
+    def read(self, state: FaultState,
+             true_T: jax.Array) -> tuple[FaultState, jax.Array]:
+        """Sample all K sensors once: ``true_T`` [L] -> readings [K, L].
+
+        Pure jax, fixed shapes; every ``if`` below is on a STATIC spec
+        field, so disabled sub-faults are absent from the traced
+        program.  Returns ``(state', readings)``.
+        """
+        key, latch = state.key, state.latch
+        K = self.n_sensors
+        r = jnp.broadcast_to(true_T.astype(jnp.float32),
+                             (K,) + true_T.shape)
+        if self.offset_C > 0:
+            r = r + state.offset[:, None]
+        if self.drift_C != 0.0:
+            r = r + self.drift_C * state.t.astype(jnp.float32)
+        if self.noise_C > 0:
+            key, sub = jax.random.split(key)
+            r = r + self.noise_C * jax.random.normal(sub, r.shape)
+        if self.quant_C > 0:
+            r = jnp.round(r / self.quant_C) * self.quant_C
+        if self.n_stuck > 0:
+            latch = jnp.where(jnp.isnan(latch), r, latch)
+            stuck = (jnp.arange(K) < self.n_stuck)[:, None]
+            r = jnp.where(stuck, latch, r)
+        if self.p_dropout > 0:
+            key, sub = jax.random.split(key)
+            drop = jax.random.uniform(sub, r.shape) < self.p_dropout
+            r = jnp.where(drop, jnp.nan, r)
+        return FaultState(key=key, t=state.t + 1, latch=latch,
+                          offset=state.offset), r
+
+
+# ---------------------------------------------------------------------------
+# input-trace faults: transient power spikes (host-side, pre-assembly)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PowerFaultSpec:
+    """Deterministic transient power spikes on an interval trace.
+
+    ``n_spikes`` intervals (chosen by the seeded generator, without
+    replacement) have their dynamic-power frame scaled by
+    ``magnitude``; each spike extends over ``width`` consecutive
+    intervals.  Applied host-side by :func:`inject_power_spikes`
+    BEFORE case assembly, so the replay itself is untouched — the
+    spike is an input perturbation, not a model change.
+    """
+    seed: int = 0
+    n_spikes: int = 1
+    magnitude: float = 2.0
+    width: int = 1
+
+    def __post_init__(self):
+        if self.n_spikes < 0:
+            raise ValueError(f"n_spikes must be >= 0; got {self.n_spikes!r}")
+        if self.width < 1:
+            raise ValueError(f"width must be >= 1; got {self.width!r}")
+        _check_finite_nonneg("magnitude", self.magnitude)
+
+
+def inject_power_spikes(dyn_frames: np.ndarray,
+                        spec: PowerFaultSpec) -> np.ndarray:
+    """Scale ``spec.n_spikes`` seeded intervals of ``dyn_frames`` [T, ...]
+    by ``spec.magnitude`` (each spike ``spec.width`` intervals long).
+    Returns a new array; the input is not modified."""
+    out = np.array(dyn_frames, copy=True)
+    T = out.shape[0]
+    if spec.n_spikes == 0 or T == 0:
+        return out
+    rng = np.random.default_rng(spec.seed)
+    starts = rng.choice(T, size=min(spec.n_spikes, T), replace=False)
+    for s in starts:
+        out[s:s + spec.width] *= spec.magnitude
+    return out
+
+
+__all__ = ["SensorFaultSpec", "FaultState", "PowerFaultSpec",
+           "inject_power_spikes"]

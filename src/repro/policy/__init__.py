@@ -21,6 +21,15 @@ from repro.policy.dvfs import (DVFSTable, OperatingPoint,
                                build_dvfs_table, nodes)
 from repro.policy.pareto import dominates, pareto_front
 
+def _guarded_perdie() -> Policy:
+    # lazy: repro.faults.guard imports repro.policy.base, so importing
+    # it at this module's load time would cycle.  The registry entry
+    # wraps the DRAM-sensing per-die controller — the family's verdict
+    # rescuer — in the sensor-fault hardening wrapper (docs/faults.md).
+    from repro.faults.guard import GuardedPolicy
+    return GuardedPolicy(inner=PerDiePolicy())
+
+
 #: name -> zero-argument factory for the sweepable policy family; the
 #: names are SweepSpec.policies values and the `policy/<name>/*`
 #: telemetry prefixes (docs/observability.md)
@@ -32,6 +41,7 @@ POLICIES: dict[str, Callable[[], Policy]] = {
     "perdie": PerDiePolicy,
     "dvfs": DVFSPolicy,
     "predictive": PredictivePolicy,
+    "guarded": _guarded_perdie,
 }
 
 

@@ -11,11 +11,13 @@ branching on traced values, fixed-shape state, no host syncs.
 
 Contract (one call per trace interval, per design point):
 
-``init_state()``
+``init_state(n_layers=None)``
     The controller's carry pytree (fixed-shape jnp leaves; ``()`` for
     stateless controllers).  It threads through the scan carry and vmaps
     over the case batch, so every design point owns an independent
-    controller state.
+    controller state.  ``n_layers`` (the static stack height) is passed
+    by the replay so per-layer state (``GuardedPolicy``'s last-good
+    hold) can be shaped; scalar-state controllers ignore it.
 
 ``act(state, ctx) -> (state', f_power, f_perf)``
     ``ctx`` is a :class:`PolicyContext` of *measured* (start-of-interval)
@@ -50,11 +52,19 @@ class PolicyContext(NamedTuple):
     ``predict_hot``: duty candidates [K] → forecast logic hot spots [K]
     at the end of one replay substep under each candidate (the thermal
     RC one-step forecaster, ``cosim.interval_forecaster``).
+
+    ``sensor_T`` [K, L]: ALL redundant sensor readings when the replay
+    runs under a :class:`~repro.faults.models.SensorFaultSpec` (then
+    ``layer_T`` is row 0, the primary sensor — possibly faulted), else
+    ``None`` (fault-free: ``layer_T`` is the true measurement).  Only
+    hardened controllers (``repro.faults.guard.GuardedPolicy``) look at
+    it; naive policies sense the primary alone, by design.
     """
     layer_T: jax.Array
     logic_mask: jax.Array
     dram_mask: jax.Array
     predict_hot: Callable[[jax.Array], jax.Array]
+    sensor_T: jax.Array | None = None
 
 
 def masked_hot(layer_T: jax.Array, mask: jax.Array) -> jax.Array:
@@ -101,7 +111,7 @@ class Policy:
     def name(self) -> str:
         return type(self).__name__.removesuffix("Policy").lower()
 
-    def init_state(self):
+    def init_state(self, n_layers: int | None = None):
         return ()
 
     def act(self, state, ctx: PolicyContext):

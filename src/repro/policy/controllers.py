@@ -67,7 +67,7 @@ class HysteresisPolicy(Policy):
         if self.band_C < 0:
             raise ValueError(f"band_C must be >= 0; got {self.band_C!r}")
 
-    def init_state(self):
+    def init_state(self, n_layers: int | None = None):
         return jnp.float32(0.0)          # 1.0 while throttled
 
     def act(self, state, ctx: PolicyContext):
@@ -100,7 +100,7 @@ class PIDPolicy(Policy):
         if min(self.kp, self.ki, self.kd) < 0:
             raise ValueError("PID gains must be >= 0")
 
-    def init_state(self):
+    def init_state(self, n_layers: int | None = None):
         return (jnp.float32(0.0), jnp.float32(0.0))   # (∫e, prev e)
 
     def act(self, state, ctx: PolicyContext):
@@ -180,7 +180,7 @@ class DVFSPolicy(Policy):
     def name(self) -> str:
         return f"dvfs-{self.table.node}"
 
-    def init_state(self):
+    def init_state(self, n_layers: int | None = None):
         return jnp.int32(self.table.n_ops - 1)        # start at top OP
 
     def act(self, state, ctx: PolicyContext):

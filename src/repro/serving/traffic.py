@@ -47,14 +47,29 @@ class TrafficSpec:
         if self.shape not in SHAPES:
             raise ValueError(f"unknown traffic shape {self.shape!r}; "
                              f"expected one of {SHAPES}")
-        if self.horizon_s <= 0 or self.interval_s <= 0:
-            raise ValueError("horizon_s and interval_s must be > 0")
+        # every check below is phrased so NaN FAILS it: `nan <= 0` and
+        # `nan < 1` are False, so the naive comparisons would silently
+        # accept NaN knobs and lower them into NaN rate paths
+        if not (math.isfinite(self.horizon_s) and self.horizon_s > 0
+                and math.isfinite(self.interval_s)
+                and self.interval_s > 0):
+            raise ValueError(
+                "horizon_s and interval_s must be finite and > 0; got "
+                f"({self.horizon_s!r}, {self.interval_s!r})")
         if self.interval_s > self.horizon_s:
             raise ValueError("interval_s must not exceed horizon_s")
+        if not math.isfinite(self.mean_qps):
+            raise ValueError("mean_qps must be finite (<= 0 means "
+                             f"scenario-scaled); got {self.mean_qps!r}")
+        if not math.isfinite(self.period_s):
+            raise ValueError("period_s must be finite (<= 0 means one "
+                             f"cycle per horizon); got {self.period_s!r}")
         if not 0.0 <= self.swing <= 1.0:
-            raise ValueError("swing must be in [0, 1]")
-        if self.burst_ratio < 1.0:
-            raise ValueError("burst_ratio must be >= 1")
+            raise ValueError(f"swing must be in [0, 1]; got {self.swing!r}")
+        if not (math.isfinite(self.burst_ratio)
+                and self.burst_ratio >= 1.0):
+            raise ValueError("burst_ratio must be finite and >= 1; got "
+                             f"{self.burst_ratio!r}")
         if not (0.0 < self.p_enter <= 1.0 and 0.0 < self.p_exit <= 1.0):
             raise ValueError("p_enter/p_exit must be in (0, 1]")
 
@@ -72,9 +87,11 @@ class TrafficSpec:
         diurnal shapes; for bursty the seeded two-state Markov chain's
         realized rate path (mean-preserving in expectation)."""
         mean = self.mean_qps if mean_qps is None else mean_qps
-        if mean <= 0:
-            raise ValueError("mean_qps must be resolved (> 0) before "
-                             "lowering; pass one or set it on the spec")
+        # `not (mean > 0)` rather than `mean <= 0`: NaN must raise too
+        if not (math.isfinite(mean) and mean > 0):
+            raise ValueError("mean_qps must be resolved (finite, > 0) "
+                             "before lowering; pass one or set it on "
+                             f"the spec; got {mean!r}")
         T = self.n_intervals
         if self.shape == "constant":
             return np.full(T, mean)

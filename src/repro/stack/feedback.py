@@ -55,6 +55,7 @@ from repro.core import models as M
 from repro.core import thermal
 from repro.core.constants import AMBIENT_C, DRAM_LIMIT_C
 from repro.core.floorplan import MM, APFloorplan, SIMDFloorplan
+from repro.faults.models import SensorFaultSpec
 from repro.policy import Policy, PolicyContext, RampPolicy
 from repro.stack import dram
 from repro.stack.spec import (DRAM, LOGIC, PAPER_STACK, StackParams,
@@ -78,6 +79,11 @@ class FeedbackParams:
     dtm_floor: float = 0.25      # minimum DTM duty factor
     refresh_feedback: bool = True   # False -> refresh pinned at 1x
     policy: Policy | None = None    # None -> ramp from the dtm_* fields
+    faults: SensorFaultSpec | None = None   # None -> perfect sensing;
+    #   a spec injects sensor faults into the temperatures the policy
+    #   reads (repro.faults; fault state rides the scan carry).  None
+    #   keeps the traced program bit-identical to the pre-faults replay
+    #   (tests/test_faults.py pins the jaxpr).
 
     def __post_init__(self):
         if not (0.0 < self.dtm_floor <= 1.0):
@@ -158,9 +164,17 @@ def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
     dram_mask = (jnp.sum(refresh0, axis=(1, 2)) > 0).astype(
         logic_mask.dtype)
     policy = fb.resolved_policy()
+    fspec = fb.faults
+    n_layers = int(logic_mask.shape[0])
 
     def interval(carry, xs):
-        dTc, pstate = carry
+        # fspec is STATIC (a FeedbackParams field), so the fault-free
+        # branch keeps today's carry/body verbatim — a replay without a
+        # fault spec traces zero additional operations
+        if fspec is None:
+            dTc, pstate = carry
+        else:
+            dTc, pstate, fstate = carry
         P_dyn, scale = xs
         solve = solve_for(scale)
         # The policy actuates on the MEASURED (start-of-interval) hot
@@ -171,10 +185,18 @@ def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
         # keeps only the weak, contractive couplings (refresh bins,
         # leakage) implicit.
         layer_T = jnp.max(dTc, axis=(1, 2)) + t_amb
+        sensor_T = None
+        if fspec is not None:
+            # what the controller SENSES is the faulted readings: the
+            # primary (row 0) replaces layer_T, the full [K, L] array is
+            # exposed for hardened policies (GuardedPolicy)
+            fstate, sensor_T = fspec.read(fstate, layer_T)
+            layer_T = sensor_T[0]
         predict = cosim.interval_forecaster(A, solve, lm3, t_amb)
         ctx = PolicyContext(
             layer_T=layer_T, logic_mask=logic_mask, dram_mask=dram_mask,
-            predict_hot=predict(dTc, P_dyn, leak0 + refresh0))
+            predict_hot=predict(dTc, P_dyn, leak0 + refresh0),
+            sensor_T=sensor_T)
         pstate, f_power, f = policy.act(pstate, ctx)
         fp3 = f_power if jnp.ndim(f_power) == 0 else f_power[:, None, None]
         P_base = fp3 * P_dyn
@@ -201,16 +223,18 @@ def _closed_loop(dyn_frames, leak0, refresh0, logic_mask, F, cap3,
         dTn, res, (ref_W, leak_W) = jax.lax.fori_loop(
             0, fb.n_picard, picard, init)
         die = dTn[:n_die, margin:margin + die_n, margin:margin + die_n]
-        return (dTn, pstate), (
+        carry = (dTn, pstate) if fspec is None else (dTn, pstate, fstate)
+        return carry, (
             jnp.max(die, axis=(1, 2)), jnp.min(die, axis=(1, 2)),
             res, f, ref_W, leak_W, jnp.sum(P_base))
 
     dT0 = jnp.zeros_like(dyn_frames[0])
+    init = (dT0, policy.init_state(n_layers)) if fspec is None \
+        else (dT0, policy.init_state(n_layers), fspec.init_state(n_layers))
     scales = jnp.ones(dyn_frames.shape[0], dyn_frames.dtype) \
         if dt_scale is None else jnp.asarray(dt_scale, dyn_frames.dtype)
-    (dT_end, _), (mx, mn, res, f, ref_W, leak_W, dyn_W) = \
-        jax.lax.scan(interval, (dT0, policy.init_state()),
-                     (dyn_frames, scales))
+    (dT_end, *_), (mx, mn, res, f, ref_W, leak_W, dyn_W) = \
+        jax.lax.scan(interval, init, (dyn_frames, scales))
     return (dT_end + t_amb, mx + t_amb, mn + t_amb, res, f, ref_W,
             leak_W, dyn_W)
 
@@ -473,6 +497,24 @@ class StackReport:
 # per-case assembly (shared by run_stack_cosim and repro.sweep.engine)
 # ---------------------------------------------------------------------------
 
+def check_finite_power(what: str, **arrays) -> None:
+    """Raise ``ValueError`` if any power input carries non-finite cells.
+
+    NaN/inf power silently propagates into every temperature of a
+    replay and from there into verdict tables (NaN compares False
+    against the 85 °C ceiling, i.e. reads as OK) — fail at assembly
+    instead, naming the offending input.
+    """
+    for name, arr in arrays.items():
+        arr = np.asarray(arr)
+        if not np.isfinite(arr).all():
+            n_bad = int((~np.isfinite(arr)).sum())
+            raise ValueError(
+                f"{what}: power input {name!r} has {n_bad} non-finite "
+                f"cell(s) (shape {arr.shape}); refusing to replay — "
+                "NaN temperatures would silently pass the 85C verdict")
+
+
 def assemble_case(dp: M.DesignPoint, workload: str, machine: str,
                   spec: StackSpec, params: StackParams, grid_n: int,
                   trace: cosim.PowerTrace, margin: int):
@@ -501,6 +543,8 @@ def assemble_case(dp: M.DesignPoint, workload: str, machine: str,
     dfp = dram.DRAMFloorplan(die_w_mm=fp.die_w_mm)
     dyn, l0, r0, lm = stack_power_inputs(spec, grid, trace, pmap, leak_W,
                                          dfp, traffic)
+    check_finite_power(f"assemble_case({workload}/{machine})",
+                       dyn_frames=dyn, leak0=l0, refresh0=r0)
     return dyn, l0, r0, lm, grid.fields(), grid.capacity_field()
 
 

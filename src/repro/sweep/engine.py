@@ -19,6 +19,8 @@ import dataclasses
 import math
 from collections import defaultdict
 
+import numpy as np
+
 from repro import obs
 from repro.core import cosim
 from repro.core import models as M
@@ -75,9 +77,20 @@ class SweepRecord:
             layers=self.limit_layers).max())
 
     @property
+    def failed(self) -> bool:
+        """Did this case's replay yield non-finite results?  (NaN/inf
+        temperatures, residuals, or duties — a diverged solve, faulted
+        controller, or a group whose replay raised.)  Failed records
+        are isolated per case: they mark FAILED in the table and never
+        read as a passing verdict (NaN > 85 is False)."""
+        return not (np.isfinite(self.report.peak_C).all()
+                    and np.isfinite(self.report.residual_C).all()
+                    and np.isfinite(self.report.throttle).all())
+
+    @property
     def verdict_ok(self) -> bool:
         """May this die sit under (or be) 3D DRAM?  (§4.3 ceiling)"""
-        return self.time_above_limit_s == 0.0
+        return not self.failed and self.time_above_limit_s == 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,8 +122,12 @@ class SweepResult:
                 f"{rep.logic_peak_C.max():.1f},{dram_pk:.1f},"
                 f"{rep.refresh_overhead:.3f},{rep.dtm_slowdown:.3f},"
                 f"{r.time_above_limit_s:.3f},{rep.residual_C.max():.2g},"
-                f"{'OK' if r.verdict_ok else 'BLOCKED'}")
+                f"{'FAILED' if r.failed else 'OK' if r.verdict_ok else 'BLOCKED'}")
         return "\n".join(lines)
+
+    @property
+    def n_failed(self) -> int:
+        return sum(1 for r in self.records if r.failed)
 
 
 # ---------------------------------------------------------------------------
@@ -158,6 +175,35 @@ def _run_group(spec: SweepSpec, points: list[SweepPoint], n_dram: int,
             for p, mc in keys}
 
 
+def _failed_group(spec: SweepSpec, points: list[SweepPoint], n_dram: int,
+                  fb_mode: str, policy: str, params: StackParams,
+                  reason: str
+                  ) -> dict[tuple[SweepPoint, str], SweepRecord]:
+    """NaN-filled placeholder records for a group whose replay raised.
+
+    Shapes match a live replay's, every value is NaN, so each record
+    reports ``failed`` and the table row reads FAILED — the rest of the
+    sweep is unaffected (per-group failure isolation)."""
+    stack_spec = dram_on_logic(n_dram, params)
+    fb = resolve_fb(fb_mode, spec.n_picard, policy)
+    nanT = np.full((spec.n_intervals, stack_spec.n_die_layers), np.nan,
+                   np.float32)
+    nan1 = np.full(spec.n_intervals, np.nan, np.float32)
+    out = {}
+    for p in points:
+        for mc in spec.machines:
+            rep = feedback.StackReport(
+                label=f"{p.label}/{mc}",
+                interval_s=spec.t_end / spec.n_intervals, spec=stack_spec,
+                peak_C=nanT, min_C=nanT, residual_C=nan1, throttle=nan1,
+                refresh_W=nan1, leak_W=nan1, base_refresh_W=0.0,
+                tol_C=fb.picard_tol_C, dyn_W=nan1)
+            out[(p, mc)] = SweepRecord(point=p, machine=mc, report=rep)
+    print(f"sweep: group dram{n_dram}/{fb_mode}/{policy} FAILED "
+          f"({reason}); {len(out)} case(s) isolated")
+    return out
+
+
 def run_sweep(spec: SweepSpec, cache_dir=None, use_cache: bool = True,
               params: StackParams = PAPER_STACK,
               n_shards: int | None = None) -> SweepResult:
@@ -194,13 +240,24 @@ def run_sweep(spec: SweepSpec, cache_dir=None, use_cache: bool = True,
         for (n_dram, fb_mode, pol), pts in sorted(by_group.items()):
             with obs.span("sweep/group", n_dram=n_dram, fb=fb_mode,
                           policy=pol, points=len(pts)):
-                results.update(_run_group(spec, pts, n_dram, fb_mode,
-                                          pol, params, n_shards))
+                # per-group failure isolation: one group raising (bad
+                # power inputs, a faulted replay, a solver blow-up)
+                # must not kill the other groups' results — it is
+                # demoted to NaN placeholder records marked FAILED
+                try:
+                    results.update(_run_group(spec, pts, n_dram, fb_mode,
+                                              pol, params, n_shards))
+                except (ValueError, FloatingPointError) as e:
+                    obs.count("sweep/groups_failed")
+                    results.update(_failed_group(
+                        spec, pts, n_dram, fb_mode, pol, params, str(e)))
 
     records = tuple(results[(p, mc)] for p in spec.points()
                     for mc in spec.machines)
     out = SweepResult(spec=spec, records=records)
-    if use_cache:
+    # never persist failures: a cached FAILED row would keep serving
+    # the placeholder after the underlying cause is fixed
+    if use_cache and not out.n_failed:
         cache.store(out, cache_dir)
     return out
 

@@ -69,6 +69,34 @@ def test_synthetic_regression_fails(check_bench, tmp_path, bad):
     assert check_bench.main([a, "--baseline", b]) == 1
 
 
+@pytest.mark.parametrize("bad", [float("nan"), float("inf"),
+                                 float("-inf"), "50.5", None, True])
+def test_nonfinite_or_nonnumeric_metric_fails(check_bench, tmp_path, bad):
+    """The NaN hole: every tolerance comparison is False on NaN
+    (|nan - v| > tol, nan < min, nan > max), so without the explicit
+    finiteness guard a diverged bench would PASS every band it
+    regressed.  Non-numeric values (including bool) must fail too."""
+    b = _baseline(tmp_path, BASELINE)
+    a = _artifact(tmp_path, "thermal", dict(GOOD, peak_C=bad))
+    assert check_bench.main([a, "--baseline", b]) == 1
+
+
+def test_nonfinite_fails_every_rule_kind(check_bench, tmp_path):
+    """NaN must fail min-only, max-only, and exact-value rules alike —
+    not just the tolerance-band ones."""
+    nan = float("nan")
+    b = _baseline(tmp_path, BASELINE)
+    a = _artifact(tmp_path, "thermal",
+                  dict(GOOD, speedup=nan, maxdiff=nan, n_cases=nan))
+    assert check_bench.main([a, "--baseline", b]) == 1
+
+
+def test_check_metric_messages_name_the_value(check_bench):
+    fails = check_bench.check_metric("x", {"min": 1.0}, float("nan"))
+    assert fails and "non-finite" in fails[0]
+    assert check_bench.check_metric("x", {"min": 1.0}, 2.0) == []
+
+
 def test_missing_metric_fails(check_bench, tmp_path):
     b = _baseline(tmp_path, BASELINE)
     metrics = dict(GOOD)

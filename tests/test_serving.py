@@ -50,6 +50,34 @@ def test_traffic_validation():
         TrafficSpec(mean_qps=0.0).rate_qps()
 
 
+NAN, INF = float("nan"), float("inf")
+
+
+@pytest.mark.parametrize("kw", [
+    {"horizon_s": NAN}, {"horizon_s": 0.0}, {"horizon_s": INF},
+    {"interval_s": NAN}, {"interval_s": 0.0}, {"interval_s": -1.0},
+    {"mean_qps": NAN}, {"mean_qps": INF},
+    {"period_s": NAN},
+    {"burst_ratio": NAN}, {"burst_ratio": 0.5}, {"burst_ratio": INF},
+    {"p_enter": 0.0}, {"p_exit": 1.5},
+])
+def test_traffic_rejects_nonfinite_shape_params(kw):
+    """NaN knobs would sail through the naive comparisons (`nan <= 0`
+    is False) and lower into NaN rate paths; every guard is phrased so
+    NaN raises at construction instead."""
+    with pytest.raises(ValueError):
+        TrafficSpec(**kw)
+
+
+def test_rate_qps_rejects_nonfinite_mean():
+    spec = TrafficSpec(mean_qps=0.0)       # auto: resolved at lowering
+    with pytest.raises(ValueError, match="resolved"):
+        spec.rate_qps(NAN)
+    with pytest.raises(ValueError, match="resolved"):
+        spec.rate_qps(INF)
+    assert spec.rate_qps(2.0).shape == (spec.n_intervals,)
+
+
 # ------------------------------------------------------------------- cost
 
 def test_serving_cost_basics():

@@ -37,6 +37,7 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import math
 import sys
 from pathlib import Path
 
@@ -62,6 +63,15 @@ def load_artifacts(paths: list[str]) -> dict[str, dict]:
 
 def check_metric(name: str, expect: dict, got: float) -> list[str]:
     """Failure messages for one metric (empty = pass)."""
+    # NaN/inf fail loudly and first: every comparison below is False on
+    # NaN (|got - value| > tol, got < min, got > max), so without this
+    # a non-finite metric would sail through every tolerance band
+    if (
+        not isinstance(got, (int, float))
+        or isinstance(got, bool)
+        or not math.isfinite(got)
+    ):
+        return [f"non-finite or non-numeric metric value {got!r}"]
     fails = []
     value = expect.get("value")
     bounded = not {"abs_tol", "rel_tol", "min", "max"}.isdisjoint(expect)
